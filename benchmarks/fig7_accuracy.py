@@ -1,0 +1,75 @@
+"""Paper Figure 7: accuracy of in-orbit vs collaborative inference.
+
+The paper reports +44% and +52% relative accuracy from collaborative
+inference over in-orbit-only on two dataset versions (avg ~+50%), with
+~90% of data NOT downlinked.  We train the onboard/ground tier pair on
+synthetic EO tiles at two difficulty regimes and run the cascade with a
+threshold calibrated to a ~35-45% escalation budget."""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import classifier as CL
+from repro.core.cascade import CascadeConfig, CollaborativeEngine
+from repro.core.gating import ConfidenceGate, calibrate_threshold
+from repro.data import eo
+
+PAPER = {"v1": 0.44, "v2": 0.52}
+# escalation budget (the deployment knob the paper tunes against its
+# downlink budget) per dataset version
+BUDGET = {"v1": 0.45, "v2": 0.26}
+REGIMES = {
+    "v1": eo.EOConfig(cloud_fraction=0.0, dup_fraction=0.0, contrast=0.42,
+                      noise=0.26, seed=21),
+    "v2": eo.EOConfig(cloud_fraction=0.0, dup_fraction=0.0, contrast=0.58,
+                      noise=0.20, seed=22),
+}
+
+
+def run(n_train: int = 2500, n_test: int = 500):
+    rows = []
+    for name, cfg in REGIMES.items():
+        tr_t, tr_l, _ = eo.make_tiles(n_train, cfg)
+        te_t, te_l, _ = eo.make_tiles(
+            n_test, eo.EOConfig(**{**cfg.__dict__, "seed": cfg.seed + 100}))
+        keep = te_l >= 0
+        tiles, labels = te_t[keep], te_l[keep]
+
+        onboard, _ = CL.train_classifier(CL.ONBOARD, tr_t, tr_l, steps=350)
+        ground, _ = CL.train_classifier(CL.GROUND, tr_t, tr_l, steps=700)
+
+        onboard_fn = lambda b: CL.apply_classifier(onboard, CL.ONBOARD,
+                                                   jnp.asarray(b))
+        ground_fn = lambda b: CL.apply_classifier(ground, CL.GROUND,
+                                                  jnp.asarray(b))
+        # calibrate the threshold to an escalation budget (deployment knob)
+        probe = np.asarray(
+            ConfidenceGate("max_prob", 1.1).decide(
+                jnp.asarray(onboard_fn(tiles)))["confidence"])
+        thr = calibrate_threshold(probe, np.ones_like(probe, bool),
+                                  BUDGET[name])
+
+        eng = CollaborativeEngine(onboard_fn, ground_fn, CascadeConfig(
+            gate=ConfidenceGate("max_prob", thr), item_dtype_bytes=4))
+        t0 = time.perf_counter()
+        collab = eng.run(tiles, item_shape=tiles.shape[1:])
+        us = (time.perf_counter() - t0) * 1e6
+        inorbit = eng.run(tiles, item_shape=tiles.shape[1:],
+                          ground_available=False)
+
+        acc_c = float(np.mean(collab.predictions == labels))
+        acc_o = float(np.mean(inorbit.predictions == labels))
+        rel = (acc_c - acc_o) / max(acc_o, 1e-9)
+        s = collab.ledger.summary()
+        rows.append((f"fig7_accuracy_{name}", us, {
+            "acc_inorbit": round(acc_o, 3),
+            "acc_collaborative": round(acc_c, 3),
+            "relative_gain": round(rel, 3),
+            "paper_relative_gain": PAPER[name],
+            "escalation_rate": round(s["escalation_rate"], 3),
+            "threshold": round(thr, 3),
+        }))
+    return rows

@@ -1,0 +1,117 @@
+"""END-TO-END DRIVER — the paper's case study as a running system.
+
+A Tiansuan-style deployment: the cloud-native control plane registers a
+satellite (Baoyun) and a ground station, deploys the onboard/ground
+tiers via manifests, then serves batched EO requests through the full
+collaborative pipeline:
+
+    frames -> onboard tile split -> cloud/redundancy filter
+           -> onboard tier inference -> confidence gate
+           -> {results downlink | raw escalation over the contact-gated
+               message bus} -> ground tier -> merged predictions
+
+and prints the paper's headline metrics from the ledger (accuracy vs
+in-orbit-only, downlinked bytes vs bent-pipe, energy shares).
+
+    PYTHONPATH=src python examples/collaborative_inference.py
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import classifier as CL
+from repro.core.cascade import CascadeConfig, CollaborativeEngine
+from repro.core.energy import EnergyModel
+from repro.core.filtering import filter_tiles
+from repro.core.gating import ConfidenceGate
+from repro.core.link import ContactSchedule
+from repro.core.tiling import split_batch
+from repro.data import eo
+from repro.orchestration import (AppManifest, Deployer, MessageBus,
+                                 NodeSpec, Registry)
+
+
+def main():
+    # ---- control plane ----------------------------------------------------
+    print("[1/5] registering nodes (KubeEdge-style control plane)")
+    reg = Registry()
+    reg.register(NodeSpec("baoyun", "satellite",
+                          contacts=ContactSchedule(seed=4)))
+    reg.register(NodeSpec("ground-0", "ground"))
+    bus = MessageBus(reg)
+
+    print("[2/5] training tier models (YOLOv3-tiny / YOLOv3 analogues)")
+    # match the captured scene's clear-tile distribution (V1 defaults)
+    tcfg = eo.EOConfig(cloud_fraction=0.0, dup_fraction=0.0, contrast=0.55,
+                       noise=0.24, seed=41)
+    tr_t, tr_l, _ = eo.make_tiles(2000, tcfg)
+    onboard_p, _ = CL.train_classifier(CL.ONBOARD, tr_t, tr_l, steps=500)
+    ground_p, _ = CL.train_classifier(CL.GROUND, tr_t, tr_l, steps=700)
+
+    dep = Deployer(reg)
+    dep.apply(AppManifest("onboard-infer", "baoyun",
+                          factory=lambda: (CL.ONBOARD, onboard_p)))
+    dep.apply(AppManifest("ground-infer", "ground-0",
+                          factory=lambda: (CL.GROUND, ground_p)))
+
+    # ---- a day in orbit: frames arrive in batches ---------------------------
+    print("[3/5] capturing frames, splitting, filtering onboard")
+    scene = eo.EOConfig(cloud_fraction=0.86, dup_fraction=0.30,
+                        contrast=0.55, noise=0.24, seed=1)   # cloudy scene
+    frames, labels, _ = eo.make_tiles(800, scene)
+    tiles = np.asarray(split_batch(jnp.asarray(frames), 32))
+    # labels carry over 1:1 because frames are already tile-sized here
+    keep, fstats = filter_tiles(jnp.asarray(frames))
+    keep = np.asarray(keep)
+    survivors, slabels = frames[keep], labels[keep]
+    print(f"    filter rate: {float(fstats['filter_rate']):.2f} "
+          f"({len(survivors)}/{len(frames)} tiles survive)")
+
+    # ---- collaborative inference -------------------------------------------
+    print("[4/5] onboard inference + confidence gate + escalation")
+    from repro.core.gating import calibrate_threshold
+    cfgs, onboard_params = dep.worker("onboard-infer")
+    gcfg, ground_params = dep.worker("ground-infer")
+    onboard_fn = lambda b: CL.apply_classifier(onboard_params, cfgs,
+                                               jnp.asarray(b))
+    probe = np.asarray(ConfidenceGate("max_prob", 1.1).decide(
+        jnp.asarray(onboard_fn(survivors)))["confidence"])
+    thr = calibrate_threshold(probe, np.ones_like(probe, bool), 0.45)
+    engine = CollaborativeEngine(
+        onboard_fn,
+        lambda b: CL.apply_classifier(ground_params, gcfg, jnp.asarray(b)),
+        CascadeConfig(gate=ConfidenceGate("max_prob", thr),
+                      item_dtype_bytes=4))
+    res = engine.run(survivors, item_shape=survivors.shape[1:])
+    inorbit = engine.run(survivors, item_shape=survivors.shape[1:],
+                         ground_available=False)
+
+    # escalated payloads ride the contact-gated bus
+    n_esc = int(res.escalated.sum())
+    dt = bus.send("baoyun", "ground-0", "escalations", None,
+                  nbytes=int(res.ledger.get("bytes_raw_escalated")), t=0.0)
+    bus.advance(dt or 0.0)
+
+    # ---- report -------------------------------------------------------------
+    print("[5/5] results")
+    valid = slabels >= 0
+    acc_c = float(np.mean(res.predictions[valid] == slabels[valid]))
+    acc_o = float(np.mean(inorbit.predictions[valid] == slabels[valid]))
+    s = res.ledger.summary()
+    em = EnergyModel()
+    print(f"    in-orbit accuracy:        {acc_o:.3f} "
+          f"({int(valid.sum())} labeled survivors)")
+    print(f"    collaborative accuracy:   {acc_c:.3f} "
+          f"(+{(acc_c-acc_o)/max(acc_o,1e-9)*100:.0f}% relative; paper "
+          f"reports ~+50% — see benchmarks/fig7 for the calibrated run)")
+    print(f"    escalated:                {n_esc}/{len(survivors)} items, "
+          f"delivered at t={dt:.0f}s via contact window")
+    print(f"    downlinked bytes:         {int(s['bytes_downlinked']):,} vs "
+          f"bent-pipe {int(frames.nbytes):,}")
+    print(f"    total data reduction:     "
+          f"{1 - s['bytes_downlinked']/frames.nbytes:.2f} (paper: 0.90)")
+    print(f"    compute share of energy:  "
+          f"{em.compute_share_of_total():.2f} (paper: 0.17)")
+
+
+if __name__ == "__main__":
+    main()

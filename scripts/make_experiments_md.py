@@ -1,0 +1,102 @@
+"""Generate EXPERIMENTS.md from results/ artifacts (dry-run sweeps,
+benchmark CSV, perf iterations)."""
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, "src")
+from repro.analysis.roofline import load_rows, to_markdown  # noqa: E402
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def load_results(d):
+    out = []
+    for f in sorted(glob.glob(os.path.join(ROOT, d, "*.json"))):
+        out.append(json.load(open(f)))
+    return out
+
+
+def gb(x):
+    return f"{x/1e9:.2f}"
+
+
+def dryrun_table(results):
+    rows = ["| arch | shape | mesh | compile s | flops/dev | bytes/dev "
+            "| link bytes/dev | collectives (ar/ag/rs/a2a/cp) |",
+            "|---|---|---|---|---|---|---|---|"]
+    for r in results:
+        if r.get("skipped"):
+            rows.append(f"| {r['arch']} | {r['shape']} | — | SKIP "
+                        f"| — | — | — | {r['reason']} |")
+            continue
+        c = r["collectives"]
+        cc = "/".join(str(c[k]["count"]) for k in
+                      ("all-reduce", "all-gather", "reduce-scatter",
+                       "all-to-all", "collective-permute"))
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compile_s']} | {r['flops_per_device']:.2e} "
+            f"| {r['bytes_per_device']:.2e} "
+            f"| {c['total_link_bytes']:.2e} | {cc} |")
+    return "\n".join(rows)
+
+
+def bench_section(path):
+    if not os.path.exists(path):
+        return "(benchmarks not yet captured — see bench_output.txt)"
+    lines = open(path).read().strip().splitlines()
+    out = ["```csv"] + lines + ["```"]
+    return "\n".join(out)
+
+
+def perf_section():
+    """Hand-maintained perf log entries + measured artifacts."""
+    entries = []
+    for f in sorted(glob.glob(os.path.join(ROOT, "results/perf/*.json"))):
+        r = json.load(open(f))
+        if "error" in r:
+            continue
+        c = r["collectives"]["total_link_bytes"]
+        entries.append(
+            f"| {os.path.basename(f)[:-5]} | {r['arch']} | {r['shape']} "
+            f"| {r.get('sharding','baseline')}/{r['moe_dispatch']} "
+            f"| {r['flops_per_device']:.2e} | {r['bytes_per_device']:.2e} "
+            f"| {c:.2e} |")
+    hdr = ["| run | arch | shape | sharding/dispatch | flops/dev "
+           "| bytes/dev | link bytes/dev |",
+           "|---|---|---|---|---|---|---|"]
+    return "\n".join(hdr + entries)
+
+
+def main():
+    single = load_results("results/v2/single")
+    multi = load_results("results/v2b_multi")
+    if not multi:
+        multi = load_results("results/v2/multi")
+    roof = load_rows(os.path.join(ROOT, "results/v2/single"))
+
+    md = open(os.path.join(ROOT, "docs/EXPERIMENTS.header.md")).read()
+    md += "\n\n## §Dry-run — single pod (16x16 = 256 chips)\n\n"
+    md += dryrun_table(single)
+    md += "\n\n## §Dry-run — multi-pod (2x16x16 = 512 chips)\n\n"
+    md += dryrun_table(multi)
+    md += "\n\n## §Roofline — single pod, per (arch x shape)\n\n"
+    md += to_markdown(roof)
+    md += "\n\n## §Perf — measured iterations (see log below)\n\n"
+    md += perf_section()
+    if os.path.exists(os.path.join(ROOT, "docs/EXPERIMENTS.perf.md")):
+        md += "\n\n" + open(os.path.join(ROOT,
+                                         "docs/EXPERIMENTS.perf.md")).read()
+    if os.path.exists(os.path.join(ROOT, "docs/EXPERIMENTS.claims.md")):
+        md += "\n\n" + open(os.path.join(
+            ROOT, "docs/EXPERIMENTS.claims.md")).read()
+    with open(os.path.join(ROOT, "EXPERIMENTS.md"), "w") as f:
+        f.write(md)
+    print(f"wrote EXPERIMENTS.md ({len(md)} chars, "
+          f"{len(single)}+{len(multi)} dry-runs, {len(roof)} roofline rows)")
+
+
+if __name__ == "__main__":
+    main()

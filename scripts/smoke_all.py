@@ -1,0 +1,37 @@
+"""Dev helper: run a reduced forward + loss + decode step for every arch."""
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ARCH_IDS, get_reduced_config
+from repro.models import transformer as T
+
+ok = True
+for arch in ARCH_IDS:
+    cfg = get_reduced_config(arch)
+    try:
+        key = jax.random.PRNGKey(0)
+        B, S = 2, 64
+        params = T.init_params(key, cfg, max_seq=S)
+        batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+        if cfg.family == "vlm":
+            batch["patch_embeds"] = jnp.ones((B, cfg.n_patches, cfg.d_model), jnp.bfloat16) * 0.01
+        if cfg.family == "audio":
+            batch["audio_frames"] = jnp.ones((B, cfg.n_audio_frames, cfg.d_model), jnp.bfloat16) * 0.01
+        loss, metrics = T.loss_fn(params, cfg, batch)
+        n = cfg.param_count()
+        assert jnp.isfinite(loss), f"{arch}: loss not finite"
+        # decode one step
+        cache = T.init_cache(cfg, B, 128)
+        logits, cache = T.decode_step(params, cfg, cache,
+                                      batch["tokens"][:, :1], jnp.int32(0))
+        assert logits.shape == (B, 1, cfg.vocab_size), logits.shape
+        assert bool(jnp.all(jnp.isfinite(logits))), f"{arch}: decode NaN"
+        print(f"OK   {arch:24s} loss={float(loss):8.4f} params={n:,}")
+    except Exception as e:
+        ok = False
+        import traceback
+        print(f"FAIL {arch}: {type(e).__name__}: {e}")
+        traceback.print_exc(limit=6)
+sys.exit(0 if ok else 1)

@@ -1,0 +1,112 @@
+"""Roofline analysis over dry-run results (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh):
+    compute    = HLO_FLOPs / (chips x 197 TF/s bf16)
+    memory     = HLO_bytes / (chips x 819 GB/s HBM)
+    collective = collective_bytes / (chips x 50 GB/s ICI)
+(all terms per-device — post-partitioning HLO shapes are per-device, so
+no extra division by chips is applied to the numerators).
+
+Also derives MODEL_FLOPS = 6*N*D (6*N_active*D for MoE; D = tokens
+processed) and the usefulness ratio MODEL/HLO which exposes remat,
+causal-masking waste and sharding-replication waste.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.config import INPUT_SHAPES
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+
+@dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    mesh: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops_per_dev: float
+    hlo_flops_per_dev: float
+    useful_ratio: float
+    note: str = ""
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+
+def tokens_for(shape_name: str) -> int:
+    s = INPUT_SHAPES[shape_name]
+    if s.kind == "decode":
+        return s.global_batch            # one new token per sequence
+    return s.seq_len * s.global_batch
+
+
+def model_flops(res: dict) -> float:
+    """6*N*D global; backward doubles-ish -> 6ND for train already
+    includes fwd+bwd by convention; inference uses 2*N*D."""
+    n = res["params_active"]
+    d = tokens_for(res["shape"])
+    mult = 6.0 if res["kind"] == "train" else 2.0
+    return mult * n * d
+
+
+def improvement_note(row: "RooflineRow", res: dict) -> str:
+    if row.dominant == "collective":
+        return ("reduce all-gather/all-reduce volume: shard MoE dispatch "
+                "with all-to-all instead of gather, or move FSDP gathers "
+                "to reduce-scatter schedule")
+    if row.dominant == "memory":
+        if res["kind"] == "decode":
+            return ("decode is cache-bandwidth bound: shrink KV bytes "
+                    "(MLA-style latent cache / int8 KV) or batch more "
+                    "sequences per weight read")
+        return ("fuse attention/norm chains into Pallas kernels so score "
+                "blocks stay in VMEM; cast gate weights to bf16")
+    return ("increase arithmetic intensity: larger per-device batch or "
+            "wider TP sharding of heads")
+
+
+def load_rows(result_dir: str) -> list:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(result_dir, "*.json"))):
+        res = json.load(open(f))
+        if res.get("skipped") or "error" in res:
+            continue
+        n_dev = res["n_devices"]
+        flops = res["flops_per_device"]
+        byts = res["bytes_per_device"]
+        link = res["collectives"]["total_link_bytes"]
+        ct = flops / PEAK_FLOPS_BF16
+        mt = byts / HBM_BW
+        lt = link / ICI_BW
+        dom = max((("compute", ct), ("memory", mt), ("collective", lt)),
+                  key=lambda x: x[1])[0]
+        mf = model_flops(res) / n_dev
+        row = RooflineRow(
+            arch=res["arch"], shape=res["shape"], mesh=res["mesh"],
+            compute_s=ct, memory_s=mt, collective_s=lt, dominant=dom,
+            model_flops_per_dev=mf, hlo_flops_per_dev=flops,
+            useful_ratio=mf / flops if flops else float("nan"))
+        row.note = improvement_note(row, res)
+        rows.append(row)
+    return rows
+
+
+def to_markdown(rows: list) -> str:
+    out = ["| arch | shape | mesh | compute s | memory s | collective s "
+           "| bound | MODEL/HLO | what moves the bound |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r.arch} | {r.shape} | {r.mesh} | {r.compute_s:.3f} "
+            f"| {r.memory_s:.3f} | {r.collective_s:.3f} | **{r.dominant}** "
+            f"| {r.useful_ratio:.3f} | {r.note} |")
+    return "\n".join(out)

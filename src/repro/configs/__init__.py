@@ -1,0 +1,5 @@
+"""Assigned architecture configs (public-literature pool) + the paper's own
+two-tier collaborative pair.  Each module defines CONFIG (exact assigned
+numbers, citation in the docstring) and REDUCED (smoke-test variant).
+"""
+from repro.config import ARCH_IDS, get_config, get_reduced_config  # noqa: F401

@@ -1,0 +1,13 @@
+"""The paper's contribution: satellite-ground collaborative inference.
+
+Pipeline (paper §IV, Figure 5):
+    EO frames -> tiling.split -> filtering.cloud_filter -> onboard tier
+    -> confidence gate -> {downlink results | escalate raw payload}
+    -> ground tier -> merged results
+with byte-accurate link accounting (Table 1) and the energy model
+(Tables 2-3)."""
+from repro.core.cascade import CollaborativeEngine, CascadeConfig  # noqa
+from repro.core.confidence import confidence_metrics               # noqa
+from repro.core.gating import ConfidenceGate                       # noqa
+from repro.core.link import LinkModel, ContactSchedule             # noqa
+from repro.core.energy import EnergyModel                          # noqa

@@ -1,0 +1,99 @@
+"""Tile classifiers for the case study — the YOLOv3-tiny / YOLOv3
+analogue pair (DESIGN.md §2): an onboard (small) and a ground (large)
+classifier over EO tiles, trained with the framework's own AdamW.
+
+Patch-embedding + mean-pooled MLP trunk; capacity (width/depth) is the
+only difference between tiers, mirroring the paper's tiny-vs-full
+detector split.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.training import optim
+
+F32 = jnp.float32
+
+
+@dataclass(frozen=True)
+class ClassifierConfig:
+    tile: int = 32
+    patch: int = 8
+    d_model: int = 48
+    n_layers: int = 2
+    n_classes: int = 8
+    seed: int = 0
+
+
+ONBOARD = ClassifierConfig(d_model=24, n_layers=1)     # Pi-class budget
+GROUND = ClassifierConfig(d_model=96, n_layers=4)      # ground cluster
+
+
+def init_classifier(cfg: ClassifierConfig):
+    key = jax.random.PRNGKey(cfg.seed)
+    ks = jax.random.split(key, cfg.n_layers * 2 + 2)
+    pdim = cfg.patch * cfg.patch * 3
+    p = {"embed": L.dense_init(ks[0], (pdim, cfg.d_model), F32)}
+    for i in range(cfg.n_layers):
+        p[f"mlp{i}"] = L.init_swiglu(ks[i + 1], cfg.d_model,
+                                     cfg.d_model * 4, F32)
+        p[f"ln{i}"] = L.init_rmsnorm(cfg.d_model, F32)
+    p["head"] = L.dense_init(ks[-1], (cfg.d_model, cfg.n_classes), F32)
+    return p
+
+
+def apply_classifier(params, cfg: ClassifierConfig, tiles):
+    """tiles: (B, t, t, 3) -> logits (B, n_classes)."""
+    B, t, _, C = tiles.shape
+    pp = cfg.patch
+    n = t // pp
+    x = tiles.reshape(B, n, pp, n, pp, C).transpose(0, 1, 3, 2, 4, 5)
+    x = x.reshape(B, n * n, pp * pp * C).astype(F32)
+    h = x @ params["embed"]                     # (B, P, d)
+    for i in range(cfg.n_layers):
+        h = h + L.swiglu(params[f"mlp{i}"], L.rmsnorm(params[f"ln{i}"], h))
+    pooled = h.mean(axis=1)
+    return pooled @ params["head"]
+
+
+def train_classifier(cfg: ClassifierConfig, tiles, labels, *,
+                     steps: int = 300, batch: int = 64, lr: float = 3e-3,
+                     seed: int = 0):
+    """Train on labeled (non-cloudy) tiles.  Returns trained params."""
+    keep = labels >= 0
+    X = jnp.asarray(tiles[keep])
+    Y = jnp.asarray(labels[keep])
+    params = init_classifier(cfg)
+    ocfg = optim.OptimConfig(lr=lr, warmup_steps=20, total_steps=steps,
+                             weight_decay=0.01)
+    state = optim.adamw_init(params, ocfg)
+
+    @jax.jit
+    def step_fn(params, state, xb, yb):
+        def lf(p):
+            logits = apply_classifier(p, cfg, xb)
+            lp = jax.nn.log_softmax(logits)
+            return -jnp.mean(jnp.take_along_axis(lp, yb[:, None], 1))
+        loss, grads = jax.value_and_grad(lf)(params)
+        params, state, _ = optim.adamw_update(params, grads, state, ocfg)
+        return params, state, loss
+
+    rng = np.random.default_rng(seed)
+    n = X.shape[0]
+    loss = None
+    for s in range(steps):
+        idx = rng.integers(0, n, size=min(batch, n))
+        params, state, loss = step_fn(params, state, X[idx], Y[idx])
+    return params, float(loss)
+
+
+def accuracy(params, cfg: ClassifierConfig, tiles, labels) -> float:
+    keep = labels >= 0
+    logits = apply_classifier(params, cfg, jnp.asarray(tiles[keep]))
+    return float(jnp.mean((jnp.argmax(logits, -1) ==
+                           jnp.asarray(labels[keep])).astype(F32)))

@@ -1,0 +1,43 @@
+"""Confidence metrics over posterior logits.
+
+The paper gates on detector confidence; our tiers are classifiers/LMs,
+so the gate consumes (B, V) logits.  On TPU the fused Pallas
+``conf_gate`` kernel computes all metrics in one HBM pass (vocabs up to
+152k make the naive 3-pass softmax->max->entropy memory-bound); the jnp
+path is used inside jit'd training/eval code.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+METRICS = ("max_prob", "entropy", "margin")
+
+
+def confidence_metrics(logits: jax.Array, *, use_kernel: bool = False) -> dict:
+    """logits: (..., V) -> dict of (...,)-shaped metrics + argmax."""
+    if use_kernel:
+        from repro.kernels import ops
+        flat = logits.reshape(-1, logits.shape[-1])
+        out = ops.confidence_gate(flat)
+        return {k: v.reshape(logits.shape[:-1]) for k, v in out.items()}
+    from repro.kernels.ref import confidence_gate_ref
+    flat = logits.reshape(-1, logits.shape[-1])
+    out = confidence_gate_ref(flat)
+    return {k: v.reshape(logits.shape[:-1]) for k, v in out.items()}
+
+
+def normalized_entropy_confidence(entropy: jax.Array, vocab: int) -> jax.Array:
+    """Map entropy to a [0,1] confidence (1 = fully confident)."""
+    return 1.0 - entropy / jnp.log(vocab)
+
+
+def score(metrics: dict, metric: str, vocab: int) -> jax.Array:
+    """A single scalar confidence in [0, 1] per item."""
+    if metric == "max_prob":
+        return metrics["max_prob"]
+    if metric == "margin":
+        return metrics["margin"]
+    if metric == "entropy":
+        return normalized_entropy_confidence(metrics["entropy"], vocab)
+    raise ValueError(metric)

@@ -1,0 +1,70 @@
+"""Onboard redundancy filtering (paper §II/IV): 80-90% of raw EO data
+over southwest China is invalid due to cloud cover; discarding cloudy /
+low-information tiles BEFORE inference and downlink is where the bulk of
+the paper's 90% data reduction comes from (Figure 6).
+
+Two filters, composable:
+  * cloud filter — clouds are bright and low-texture: mean brightness
+    above ``bright_thresh`` AND local variance below ``texture_thresh``.
+  * redundancy filter — near-duplicate tiles (60% of remote-sensing
+    images are highly similar [paper §II]): tiles whose downsampled
+    signature matches a previously seen signature are dropped.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class CloudFilterConfig:
+    bright_thresh: float = 0.72
+    texture_thresh: float = 0.012
+    sig_grid: int = 4            # signature resolution for dedup
+    sig_tol: float = 0.035       # L-inf tolerance for "duplicate"
+
+
+def cloud_mask(tiles: jax.Array, cfg: CloudFilterConfig = CloudFilterConfig()):
+    """tiles: (N, t, t, C) in [0,1].  True = cloudy (drop)."""
+    lum = jnp.mean(tiles.astype(jnp.float32), axis=-1)      # (N, t, t)
+    mean_b = jnp.mean(lum, axis=(1, 2))
+    var_t = jnp.var(lum, axis=(1, 2))
+    return (mean_b > cfg.bright_thresh) & (var_t < cfg.texture_thresh)
+
+
+def tile_signature(tiles: jax.Array, grid: int) -> jax.Array:
+    """Downsampled luminance signature (N, grid*grid)."""
+    N, t, _, _ = tiles.shape
+    lum = jnp.mean(tiles.astype(jnp.float32), axis=-1)
+    s = t // grid
+    sig = lum[:, :grid * s, :grid * s].reshape(N, grid, s, grid, s)
+    return sig.mean(axis=(2, 4)).reshape(N, -1)
+
+
+def redundancy_mask(tiles: jax.Array,
+                    cfg: CloudFilterConfig = CloudFilterConfig()):
+    """True = near-duplicate of an EARLIER tile in the batch (drop).
+    O(N^2) signature comparison — N is the per-pass tile count."""
+    sig = tile_signature(tiles, cfg.sig_grid)                # (N, G)
+    d = jnp.max(jnp.abs(sig[:, None, :] - sig[None, :, :]), axis=-1)
+    earlier = jnp.tril(jnp.ones(d.shape[:2], bool), k=-1)
+    return jnp.any((d < cfg.sig_tol) & earlier, axis=1)
+
+
+def filter_tiles(tiles: jax.Array,
+                 cfg: CloudFilterConfig = CloudFilterConfig()):
+    """Returns (keep_mask (N,), stats dict).  keep = not cloudy and not
+    redundant."""
+    cloudy = cloud_mask(tiles, cfg)
+    dup = redundancy_mask(tiles, cfg)
+    keep = ~(cloudy | dup)
+    n = tiles.shape[0]
+    stats = {
+        "n_tiles": n,
+        "cloud_rate": jnp.mean(cloudy.astype(jnp.float32)),
+        "dup_rate": jnp.mean(dup.astype(jnp.float32)),
+        "filter_rate": 1.0 - jnp.mean(keep.astype(jnp.float32)),
+    }
+    return keep, stats

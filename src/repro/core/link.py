@@ -1,0 +1,100 @@
+"""Space-ground link model (paper Table 1 + §II).
+
+Baoyun: 500±50 km orbit, uplink 0.1–1 Mbps, downlink ≥40 Mbps; the
+downlink is only available during ground-station contact windows, and
+packet loss on the downlink can be severe (one mission lost 80% of
+packets [paper ref 12]).  Deterministic PRNG — every test reproduces.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import List, Tuple
+
+import numpy as np
+
+SECONDS_PER_DAY = 86_400.0
+
+
+@dataclass(frozen=True)
+class LinkModel:
+    uplink_mbps: float = 1.0
+    downlink_mbps: float = 40.0
+    packet_loss: float = 0.05          # fraction of packets lost (retried)
+    packet_bytes: int = 1024
+    orbital_altitude_km: float = 500.0
+
+    @property
+    def orbital_period_s(self) -> float:
+        # Kepler: T = 2*pi*sqrt(a^3/mu), a = R_e + h
+        mu = 3.986004418e14
+        a = (6371.0 + self.orbital_altitude_km) * 1e3
+        return 2.0 * np.pi * np.sqrt(a ** 3 / mu)
+
+    def downlink_time_s(self, nbytes: float) -> float:
+        """Expected transfer time incl. loss-retransmit overhead."""
+        eff = self.downlink_mbps * 1e6 / 8.0 * (1.0 - self.packet_loss)
+        return nbytes / eff
+
+    def uplink_time_s(self, nbytes: float) -> float:
+        eff = self.uplink_mbps * 1e6 / 8.0 * (1.0 - self.packet_loss)
+        return nbytes / eff
+
+    def deliver(self, nbytes: int, rng: np.random.Generator) -> Tuple[int, int]:
+        """Simulate packetized delivery.  Returns (delivered_packets,
+        retransmitted_packets)."""
+        n_pkts = -(-nbytes // self.packet_bytes)
+        retrans = int(rng.binomial(n_pkts, self.packet_loss))
+        return n_pkts, retrans
+
+
+@dataclass(frozen=True)
+class ContactSchedule:
+    """Ground-station visibility: a LEO satellite sees a given station
+    for ~8 minutes, a handful of passes per day."""
+    link: LinkModel = LinkModel()
+    contact_duration_s: float = 480.0
+    contacts_per_day: int = 6
+    seed: int = 0
+
+    def windows(self, horizon_s: float) -> List[Tuple[float, float]]:
+        """Deterministic pseudo-random contact windows over a horizon."""
+        rng = np.random.default_rng(self.seed)
+        period = SECONDS_PER_DAY / self.contacts_per_day
+        out = []
+        t = 0.0
+        while t < horizon_s:
+            start = t + float(rng.uniform(0.2, 0.8)) * (
+                period - self.contact_duration_s)
+            out.append((start, min(start + self.contact_duration_s,
+                                   horizon_s)))
+            t += period
+        return out
+
+    def in_contact(self, t: float, horizon_s: float = SECONDS_PER_DAY) -> bool:
+        return any(a <= t < b for a, b in self.windows(horizon_s))
+
+    def next_window(self, t: float, horizon_s: float = SECONDS_PER_DAY):
+        for a, b in self.windows(horizon_s):
+            if b > t:
+                return (max(a, t), b)
+        return None
+
+    def downlink_capacity_bytes(self, horizon_s: float) -> float:
+        """Total bytes deliverable over the horizon."""
+        total_s = sum(b - a for a, b in self.windows(horizon_s))
+        return total_s * self.link.downlink_mbps * 1e6 / 8.0 * (
+            1.0 - self.link.packet_loss)
+
+
+def payload_bytes_result(n_items: int, classes: int = 1) -> int:
+    """Compact inference result: class id + confidence + bbox-ish tuple
+    per item (16 bytes, generous)."""
+    return 16 * n_items * max(classes, 1)
+
+
+def payload_bytes_raw(n_items: int, item_shape, dtype_bytes: int = 1) -> int:
+    n = 1
+    for d in item_shape:
+        n *= d
+    return n_items * n * dtype_bytes

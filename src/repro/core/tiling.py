@@ -1,0 +1,38 @@
+"""Onboard image splitting (paper §IV): high-resolution EO frames exceed
+the satellite's compute budget, so frames are split into fixed-size
+tiles before in-orbit inference.  Works on (H, W, C) frames and batches
+thereof; pure JAX so it fuses into the onboard preprocessing graph."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def split_frame(frame: jax.Array, tile: int) -> jax.Array:
+    """(H, W, C) -> (n_tiles, tile, tile, C); H, W padded up to tile."""
+    H, W, C = frame.shape
+    Hp = -(-H // tile) * tile
+    Wp = -(-W // tile) * tile
+    f = jnp.pad(frame, ((0, Hp - H), (0, Wp - W), (0, 0)))
+    f = f.reshape(Hp // tile, tile, Wp // tile, tile, C)
+    return f.transpose(0, 2, 1, 3, 4).reshape(-1, tile, tile, C)
+
+
+def merge_tiles(tiles: jax.Array, H: int, W: int) -> jax.Array:
+    """Inverse of split_frame (drops padding)."""
+    n, t, _, C = tiles.shape
+    nh, nw = -(-H // t), -(-W // t)
+    f = tiles.reshape(nh, nw, t, t, C).transpose(0, 2, 1, 3, 4)
+    return f.reshape(nh * t, nw * t, C)[:H, :W]
+
+
+def tile_grid(H: int, W: int, tile: int) -> Tuple[int, int]:
+    return -(-H // tile), -(-W // tile)
+
+
+def split_batch(frames: jax.Array, tile: int) -> jax.Array:
+    """(B, H, W, C) -> (B * n_tiles, tile, tile, C)."""
+    out = jax.vmap(lambda f: split_frame(f, tile))(frames)
+    return out.reshape(-1, tile, tile, frames.shape[-1])

@@ -1,0 +1,5 @@
+"""Pallas TPU kernels for the compute hot spots.
+
+Each kernel lives in ``<name>.py`` (pl.pallas_call + explicit BlockSpec
+VMEM tiling), has a pure-jnp oracle in ``ref.py`` and a jit'd dispatch
+wrapper in ``ops.py`` (interpret=True off-TPU, Mosaic on TPU)."""

@@ -1,0 +1,116 @@
+"""Pallas TPU confidence-gate kernel — THE paper's gating primitive.
+
+The satellite tier decides per item whether to downlink its own result
+or escalate to the ground tier, based on posterior confidence (paper
+§IV).  For LM tiers the posterior lives over vocabularies up to 152k:
+computing softmax -> max/entropy/margin naively is 3+ HBM passes over
+(B, V) logits.  This kernel fuses everything into ONE streaming pass:
+
+    one grid step = one (row-block, vocab-block) tile in VMEM; online
+    running (max1, max2, argmax, sumexp, sum x*exp) scratch across the
+    vocab dimension; on the last vocab block it emits
+        max_prob = exp(m1 - lse)
+        entropy  = (m + log l) - sx / l
+        margin   = exp(m1 - lse) - exp(m2 - lse)
+        argmax
+
+Grid: (n_row_blocks, n_vocab_blocks); vocab minor-most so scratch
+persists.  BlockSpec: logits (block_b, block_v) VMEM tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+def _kernel(x_ref, mp_ref, ent_ref, mar_ref, am_ref,
+            m1_s, m2_s, am_s, l_s, sx_s, *,
+            block_v: int, n_v: int, vocab: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m1_s[...] = jnp.full_like(m1_s, NEG_INF)
+        m2_s[...] = jnp.full_like(m2_s, NEG_INF)
+        am_s[...] = jnp.zeros_like(am_s)
+        l_s[...] = jnp.zeros_like(l_s)
+        sx_s[...] = jnp.zeros_like(sx_s)
+
+    x = x_ref[...].astype(F32)                               # (bb, bv)
+    vpos = j * block_v + jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    x = jnp.where(vpos < vocab, x, NEG_INF)
+
+    # block-local top-2
+    bm1 = jnp.max(x, axis=-1)
+    bam = j * block_v + jnp.argmax(x, axis=-1).astype(jnp.int32)
+    x2 = jnp.where(vpos == bam[:, None], NEG_INF, x)
+    bm2 = jnp.max(x2, axis=-1)
+
+    m1p, m2p, amp = m1_s[...], m2_s[...], am_s[...]
+    m1n = jnp.maximum(m1p, bm1)
+    # new second max: the best of (old pair, block pair) minus the new max
+    m2n = jnp.maximum(jnp.maximum(m2p, bm2), jnp.minimum(m1p, bm1))
+    amn = jnp.where(bm1 > m1p, bam, amp)
+
+    # online softmax stats
+    bl = jnp.sum(jnp.exp(x - m1n[:, None]), axis=-1)
+    bsx = jnp.sum(jnp.where(x > NEG_INF / 2,
+                            x * jnp.exp(x - m1n[:, None]), 0.0), axis=-1)
+    corr = jnp.exp(m1p - m1n)
+    l_s[...] = l_s[...] * corr + bl
+    sx_s[...] = sx_s[...] * corr + bsx
+    m1_s[...], m2_s[...], am_s[...] = m1n, m2n, amn
+
+    @pl.when(j == n_v - 1)
+    def _finish():
+        m1, m2 = m1_s[...], m2_s[...]
+        l = jnp.maximum(l_s[...], 1e-30)
+        lse = m1 + jnp.log(l)
+        mp = jnp.exp(m1 - lse)
+        mp2 = jnp.exp(m2 - lse)
+        mp_ref[...] = mp
+        ent_ref[...] = lse - sx_s[...] / l          # H = lse - E[x]
+        mar_ref[...] = mp - mp2
+        am_ref[...] = am_s[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_v",
+                                             "interpret"))
+def confidence_gate_kernel(logits, *, block_b: int = 8, block_v: int = 2048,
+                           interpret: bool = False):
+    """logits: (B, V) -> dict(max_prob, entropy, margin, argmax)."""
+    B, V = logits.shape
+    block_b = min(block_b, B)
+    block_v = min(block_v, -(-V // 128) * 128)
+    assert B % block_b == 0, (B, block_b)
+    n_b = B // block_b
+    Vp = -(-V // block_v) * block_v
+    if Vp != V:
+        logits = jnp.pad(logits, ((0, 0), (0, Vp - V)),
+                         constant_values=NEG_INF)
+    n_v = Vp // block_v
+    grid = (n_b, n_v)
+
+    kernel = functools.partial(_kernel, block_v=block_v, n_v=n_v, vocab=V)
+    out_shapes = [jax.ShapeDtypeStruct((B,), F32) for _ in range(3)] + \
+                 [jax.ShapeDtypeStruct((B,), jnp.int32)]
+    row_spec = pl.BlockSpec((block_b,), lambda i, j: (i,))
+    mp, ent, mar, am = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_b, block_v), lambda i, j: (i, j))],
+        out_specs=[row_spec] * 4,
+        out_shape=out_shapes,
+        scratch_shapes=[pltpu.VMEM((block_b,), F32)] * 2
+        + [pltpu.VMEM((block_b,), jnp.int32)]
+        + [pltpu.VMEM((block_b,), F32)] * 2,
+        interpret=interpret,
+    )(logits)
+    return {"max_prob": mp, "entropy": ent, "margin": mar, "argmax": am}

@@ -1,0 +1,100 @@
+"""Pallas TPU decode-attention kernel: ONE query token per sequence
+against a long KV cache (flash-decoding style).
+
+Grid: (batch, kv_heads, n_kv_blocks) — the kv-block axis is minor-most,
+so the online-softmax scratch persists across it.  All ``g = H/Hkv``
+query heads of a kv head are processed together as the matmul M dim,
+giving the MXU a (g x D) @ (D x block_k) contraction instead of g
+vector-matrix products.
+
+BlockSpec tiling (VMEM):
+    q:     (1, 1, g*D)        — the g query heads of this kv head
+    k, v:  (1, block_k, 1, D) — streamed cache blocks
+    out:   (1, 1, g*D)        — written on the last kv block
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s, *,
+            block_k: int, n_kv: int, g: int, scale: float):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    D = k_ref.shape[-1]
+    q = q_ref[0, 0, :].reshape(g, D).astype(F32) * scale   # (g, D)
+    k = k_ref[0, :, 0, :].astype(F32)                      # (bk, D)
+    v = v_ref[0, :, 0, :].astype(F32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (g, bk)
+
+    kv_len = len_ref[0]
+    kpos = j * block_k + jax.lax.broadcasted_iota(jnp.int32, (g, block_k), 1)
+    s = jnp.where(kpos < kv_len, s, NEG_INF)
+
+    m_prev = m_s[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_s[...] = l_s[...] * corr + jnp.sum(p, axis=-1)
+    acc_s[...] = (acc_s[...] * corr[:, None]
+                  + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ()))))
+    m_s[...] = m_new
+
+    @pl.when(j == n_kv - 1)
+    def _finish():
+        l_safe = jnp.maximum(l_s[...], 1e-30)
+        o_ref[0, 0, :] = (acc_s[...] / l_safe[:, None]).reshape(-1).astype(
+            o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention_kernel(q, k, v, kv_len, *, block_k: int = 512,
+                            interpret: bool = False):
+    """q: (B, H, D); k, v: (B, S, Hkv, D); kv_len: () int32 valid length.
+    Returns (B, H, D)."""
+    B, H, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    g = H // Hkv
+    block_k = min(block_k, S)
+    assert S % block_k == 0, (S, block_k)
+    n_kv = S // block_k
+    grid = (B, Hkv, n_kv)
+
+    kernel = functools.partial(_kernel, block_k=block_k, n_kv=n_kv, g=g,
+                               scale=D ** -0.5)
+    qg = q.reshape(B, Hkv, g * D)
+    kv_len_arr = jnp.asarray(kv_len, jnp.int32).reshape(1)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),     # kv_len scalar
+            pl.BlockSpec((1, 1, g * D), lambda b, h, j: (b, h, 0)),
+            pl.BlockSpec((1, block_k, 1, D), lambda b, h, j: (b, j, h, 0)),
+            pl.BlockSpec((1, block_k, 1, D), lambda b, h, j: (b, j, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g * D), lambda b, h, j: (b, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, g * D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g,), F32),
+            pltpu.VMEM((g,), F32),
+            pltpu.VMEM((g, D), F32),
+        ],
+        interpret=interpret,
+    )(kv_len_arr, qg, k, v)
+    return out.reshape(B, H, D)

@@ -1,0 +1,116 @@
+"""Pallas TPU flash-attention (forward) kernel.
+
+Grid: (batch, q_heads, n_q_blocks, n_kv_blocks).  The TPU grid executes
+minor-most dimension sequentially per core, so fp32 VMEM scratch
+(running max / denominator / output accumulator) persists across the
+kv-block dimension — the online-softmax state machine of
+FlashAttention-2 mapped onto the Pallas revisiting pattern.
+
+BlockSpec tiling (per grid step, all VMEM):
+    q:   (1, block_q, 1, D)     — revisited across kv blocks
+    k,v: (1, block_k, 1, D)     — streamed
+    out: (1, block_q, 1, D)     — written on the last kv block
+VMEM footprint ~ block_q*D + 2*block_k*D + block_q*block_k floats; the
+default (block_q=block_k=512, D=128) is ~0.9 MB — far under the 16 MB
+v5e VMEM, leaving room for double buffering.  MXU alignment: all matmul
+dims are multiples of 128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s, *,
+            causal: bool, window: int, block_q: int, block_k: int,
+            n_kv: int, scale: float):
+    i = pl.program_id(2)          # q block
+    j = pl.program_id(3)          # kv block
+
+    @pl.when(j == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    q = q_ref[0, :, 0, :].astype(F32) * scale            # (bq, D)
+    k = k_ref[0, :, 0, :].astype(F32)                    # (bk, D)
+    v = v_ref[0, :, 0, :].astype(F32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bk)
+
+    qpos = i * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_k), 0)
+    kpos = j * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_k), 1)
+    mask = jnp.ones((block_q, block_k), jnp.bool_)
+    if causal:
+        mask &= qpos >= kpos
+    if window:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_s[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_s[...] = l_s[...] * corr + jnp.sum(p, axis=-1)
+    acc_s[...] = (acc_s[...] * corr[:, None]
+                  + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ()))))
+    m_s[...] = m_new
+
+    @pl.when(j == n_kv - 1)
+    def _finish():
+        l_safe = jnp.maximum(l_s[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc_s[...] / l_safe[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention_kernel(q, k, v, *, causal: bool = True, window: int = 0,
+                           block_q: int = 512, block_k: int = 512,
+                           interpret: bool = False):
+    """q: (B, Sq, H, D); k, v: (B, Skv, Hkv, D).  Returns (B, Sq, H, D).
+
+    GQA is handled by the kv BlockSpec index_map (query head h reads kv
+    head h // (H // Hkv)) — no repeated kv materialization.
+    """
+    B, Sq, H, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    g = H // Hkv
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Skv)
+    assert Sq % block_q == 0 and Skv % block_k == 0, (Sq, Skv)
+    n_q, n_kv = Sq // block_q, Skv // block_k
+    grid = (B, H, n_q, n_kv)
+
+    kernel = functools.partial(
+        _kernel, causal=causal, window=window, block_q=block_q,
+        block_k=block_k, n_kv=n_kv, scale=D ** -0.5)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, D), lambda b, h, i, j: (b, i, h, 0)),
+            pl.BlockSpec((1, block_k, 1, D),
+                         lambda b, h, i, j: (b, j, h // g, 0)),
+            pl.BlockSpec((1, block_k, 1, D),
+                         lambda b, h, i, j: (b, j, h // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, D),
+                               lambda b, h, i, j: (b, i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Sq, H, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), F32),               # running max
+            pltpu.VMEM((block_q,), F32),               # denominator
+            pltpu.VMEM((block_q, D), F32),             # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,50 @@
+"""Pallas TPU row-wise absmax int8 quantization kernel.
+
+Beyond-paper payload compression: escalated offloads (low-confidence
+items shipped satellite -> ground) carry activations/embeddings; int8
+with per-row scales cuts the downlink bytes 2x vs bf16 / 4x vs fp32 at
+negligible accuracy cost (EXPERIMENTS.md §Perf).
+
+Grid: (n_row_blocks,).  One VMEM tile holds (block_rows, D) — absmax
+reduce and scaled round in a single pass, no HBM round-trip between the
+two.  D is padded to a lane multiple (128) by the wrapper.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+F32 = jnp.float32
+
+
+def _kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(F32)                      # (bb, D)
+    amax = jnp.max(jnp.abs(x), axis=-1)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x / scale[:, None]), -127, 127)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = scale
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def int8_quantize_kernel(x, *, block_rows: int = 256,
+                         interpret: bool = False):
+    """x: (N, D) -> (q int8 (N, D), scale f32 (N,))."""
+    N, D = x.shape
+    block_rows = min(block_rows, N)
+    assert N % block_rows == 0, (N, block_rows)
+    grid = (N // block_rows,)
+    q, s = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, D), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((block_rows, D), lambda i: (i, 0)),
+                   pl.BlockSpec((block_rows,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((N, D), jnp.int8),
+                   jax.ShapeDtypeStruct((N,), F32)],
+        interpret=interpret,
+    )(x)
+    return q, s

@@ -1,0 +1,43 @@
+"""jit'd dispatch wrappers: Pallas/Mosaic on TPU, interpret=True (the
+kernel body executed in Python) on CPU, with the pure-jnp oracle in
+``ref.py`` always available for testing."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.conf_gate import confidence_gate_kernel
+from repro.kernels.decode_attention import decode_attention_kernel
+from repro.kernels.flash_attention import flash_attention_kernel
+from repro.kernels.int8_quant import int8_quantize_kernel
+from repro.kernels.ssm_scan import ssm_chunk_scan_kernel
+from repro.kernels import ref  # noqa: F401  (re-exported for tests)
+
+
+@functools.lru_cache(maxsize=1)
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, **kw):
+    return flash_attention_kernel(q, k, v, causal=causal, window=window,
+                                  interpret=not on_tpu(), **kw)
+
+
+def decode_attention(q, k, v, kv_len, **kw):
+    return decode_attention_kernel(q, k, v, kv_len,
+                                   interpret=not on_tpu(), **kw)
+
+
+def ssm_chunk_scan(x, dt, A, Bm, Cm, *, chunk=256, **kw):
+    return ssm_chunk_scan_kernel(x, dt, A, Bm, Cm, chunk=chunk,
+                                 interpret=not on_tpu(), **kw)
+
+
+def confidence_gate(logits, **kw):
+    return confidence_gate_kernel(logits, interpret=not on_tpu(), **kw)
+
+
+def int8_quantize(x, **kw):
+    return int8_quantize_kernel(x, interpret=not on_tpu(), **kw)

@@ -1,0 +1,99 @@
+"""Pure-jnp oracles for every Pallas kernel.  These are the ground truth
+the kernels are swept against (tests/test_kernels.py)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0):
+    """q: (B,S,H,D); k,v: (B,S,Hkv,D) — plain softmax attention."""
+    B, Sq, H, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    g = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, g, D).astype(F32) * D ** -0.5
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(F32))
+    qpos = jnp.arange(Sq)
+    kpos = jnp.arange(Skv)
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window:
+        mask &= (qpos[:, None] - kpos[None, :]) < window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(F32))
+    return o.reshape(B, Sq, H, v.shape[-1]).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, kv_len):
+    """q: (B,H,D); k,v: (B,S,Hkv,D); kv_len: scalar valid length."""
+    B, H, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    g = H // Hkv
+    qg = q.reshape(B, Hkv, g, D).astype(F32) * D ** -0.5
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k.astype(F32))
+    mask = jnp.arange(S) < kv_len
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p, v.astype(F32))
+    return o.reshape(B, H, v.shape[-1]).astype(q.dtype)
+
+
+def ssm_chunk_scan_ref(x, dt, A, Bm, Cm, chunk):
+    """Mamba2 SSD oracle — delegates to the model implementation (itself
+    validated against a step-by-step sequential scan in tests)."""
+    from repro.models.ssm import ssd_chunked
+    return ssd_chunked(x, dt, A, Bm, Cm, chunk)
+
+
+def ssm_sequential_ref(x, dt, A, Bm, Cm):
+    """Step-by-step SSM recurrence (the definitional ground truth).
+    x: (B,S,H,P); dt: (B,S,H); A: (H,); Bm/Cm: (B,S,H,N)."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp
+        decay = jnp.exp(dtt * A)                        # (B,H)
+        h = h * decay[..., None, None] + jnp.einsum(
+            "bh,bhn,bhp->bhpn", dtt, bt, xt)
+        y = jnp.einsum("bhn,bhpn->bhp", ct, h)
+        return h, y
+
+    h0 = jnp.zeros((B, H, P, N), F32)
+    xs = (x.swapaxes(0, 1).astype(F32), dt.swapaxes(0, 1).astype(F32),
+          Bm.swapaxes(0, 1).astype(F32), Cm.swapaxes(0, 1).astype(F32))
+    h, ys = jax.lax.scan(step, h0, xs)
+    return ys.swapaxes(0, 1), h
+
+
+def confidence_gate_ref(logits):
+    """Fused confidence metrics over vocab logits (B, V) in fp32:
+    returns dict(max_prob, entropy, margin, argmax)."""
+    x = logits.astype(F32)
+    p = jax.nn.softmax(x, axis=-1)
+    top2 = jax.lax.top_k(p, 2)[0]
+    ent = -jnp.sum(jnp.where(p > 0, p * jnp.log(jnp.maximum(p, 1e-30)), 0.0),
+                   axis=-1)
+    return {
+        "max_prob": jnp.max(p, axis=-1),
+        "entropy": ent,
+        "margin": top2[..., 0] - top2[..., 1],
+        "argmax": jnp.argmax(x, axis=-1).astype(jnp.int32),
+    }
+
+
+def int8_quantize_ref(x):
+    """Row-wise absmax int8 quantization.  x: (N, D)."""
+    amax = jnp.max(jnp.abs(x.astype(F32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(F32) / scale[:, None]), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def int8_dequantize_ref(q, scale):
+    return q.astype(F32) * scale[:, None]

@@ -1,0 +1,112 @@
+"""Pallas TPU Mamba2 (SSD) chunked-scan kernel.
+
+One kernel instance owns one (batch, head) pair and walks the chunk
+dimension sequentially (minor-most grid axis), carrying the inter-chunk
+SSM state (P x N) in fp32 VMEM scratch — the Pallas revisiting pattern
+turns the cross-chunk recurrence into scratch persistence, so the whole
+selective scan is ONE kernel launch instead of a lax.scan of HBM
+round-trips.
+
+Per chunk (all VMEM):
+    x:  (Lc, P)   dt: (Lc,)   B, C: (Lc, N)
+    intra-chunk: decay matrix from cumsum(log a), quadratic (C B^T ∘ M) x
+    inter-chunk: y += C (exp(l_t) * h_prev);  h = exp(l_L) h_prev + hc
+
+VMEM ~ Lc*(P+2N) + Lc^2 + P*N floats; defaults (Lc=256, P=64, N=64)
+~0.4 MB.  MXU dims multiples of 64/128 (P, N, Lc).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, hout_ref, h_s, *,
+            n_chunks: int, chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_s[...] = jnp.zeros_like(h_s)
+
+    x = x_ref[0, 0, :, :].astype(F32)           # (Lc, P)
+    dt = dt_ref[0, 0, :].astype(F32)            # (Lc,)
+    A = a_ref[pl.program_id(1)]                 # this head's decay (negative)
+    Bm = b_ref[0, 0, :, :].astype(F32)          # (Lc, N)
+    Cm = c_ref[0, 0, :, :].astype(F32)          # (Lc, N)
+
+    loga = dt * A                               # (Lc,)
+    cum = jnp.cumsum(loga)                      # l_t
+    # intra-chunk quadratic
+    S = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())))   # (Lc, Lc)
+    decay = cum[:, None] - cum[None, :]
+    tri = (jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+           >= jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1))
+    W = jnp.where(tri, S * jnp.exp(decay), 0.0) * dt[None, :]
+    y = jax.lax.dot_general(W, x, (((1,), (0,)), ((), ())))     # (Lc, P)
+
+    # inter-chunk contribution from the carried state
+    h = h_s[...]                                                # (P, N)
+    y = y + jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        Cm, h, (((1,), (1,)), ((), ())))
+
+    # state update: h = exp(l_L) h + sum_s exp(l_L - l_s) dt_s x_s B_s^T
+    wS = jnp.exp(cum[-1] - cum) * dt                            # (Lc,)
+    hc = jax.lax.dot_general(x * wS[:, None], Bm,
+                             (((0,), (0,)), ((), ())))          # (P, N)
+    h_s[...] = jnp.exp(cum[-1]) * h + hc
+
+    y_ref[0, 0, :, :] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == n_chunks - 1)
+    def _finish():
+        hout_ref[0, 0, :, :] = h_s[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssm_chunk_scan_kernel(x, dt, A, Bm, Cm, *, chunk: int = 256,
+                          interpret: bool = False):
+    """x: (B,S,H,P); dt: (B,S,H) post-softplus; A: (H,) negative;
+    Bm, Cm: (B,S,H,N).  Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    grid = (B, H, nc)
+
+    kernel = functools.partial(_kernel, n_chunks=nc, chunk=chunk)
+    # layout: (B, H, S, ...) so the chunk dim tiles cleanly
+    xt = x.transpose(0, 2, 1, 3)
+    dtt = dt.transpose(0, 2, 1)
+    Bt = Bm.transpose(0, 2, 1, 3)
+    Ct = Cm.transpose(0, 2, 1, 3)
+
+    y, hout = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, P), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda b, h, c: (b, h, c)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),   # A: (H,) scalars
+            pl.BlockSpec((1, 1, chunk, N), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk, N), lambda b, h, c: (b, h, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, P), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, S, P), x.dtype),
+            jax.ShapeDtypeStruct((B, H, P, N), F32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), F32)],
+        interpret=interpret,
+    )(xt, dtt, A, Bt, Ct)
+    return y.transpose(0, 2, 1, 3), hout

@@ -1,0 +1,26 @@
+"""Production mesh definitions (TPU v5e target).
+
+A FUNCTION, not a module-level constant, so importing this module never
+touches jax device state (the dry-run forces 512 host devices; tests and
+benches must keep seeing 1).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh():
+    """1-device mesh for tests/examples on CPU."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+# TPU v5e hardware constants for the roofline analysis (per chip)
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s
+HBM_BW = 819e9                    # B/s
+ICI_BW = 50e9                     # B/s per link

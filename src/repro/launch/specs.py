@@ -1,0 +1,64 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x input-shape) pair —
+weak-type-correct, shardable, no device allocation."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig, ShapeSpec, INPUT_SHAPES
+from repro.models import transformer as T
+
+SDS = jax.ShapeDtypeStruct
+
+
+def variant_for_shape(cfg: ModelConfig, shape: ShapeSpec) -> ModelConfig:
+    """long_500k needs sub-quadratic attention: SSM/hybrid run natively;
+    quadratic-attention archs get the sliding-window variant (window 4096,
+    ring-buffer cache).  See DESIGN.md §6."""
+    if (shape.name == "long_500k" and cfg.family in ("dense", "moe", "vlm")
+            and not cfg.sliding_window):
+        return cfg.with_(sliding_window=4096)
+    return cfg
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """Model inputs for a full-sequence step (train / prefill)."""
+    B, S = shape.global_batch, shape.seq_len
+    act = jnp.dtype(cfg.activation_dtype)
+    if cfg.family == "vlm":
+        s_text = S - cfg.n_patches
+        return {
+            "tokens": SDS((B, s_text), jnp.int32),
+            "patch_embeds": SDS((B, cfg.n_patches, cfg.d_model), act),
+        }
+    if cfg.family == "audio":
+        return {
+            "tokens": SDS((B, S), jnp.int32),
+            "audio_frames": SDS((B, cfg.n_audio_frames, cfg.d_model), act),
+        }
+    return {"tokens": SDS((B, S), jnp.int32)}
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """Inputs for serve_step: one new token against a seq_len KV cache."""
+    B, S = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(lambda: T.init_cache(cfg, B, S))
+    return {
+        "tokens": SDS((B, 1), jnp.int32),
+        "pos": SDS((), jnp.int32),
+        "cache": cache,
+    }
+
+
+def params_specs(cfg: ModelConfig, max_seq: int):
+    return jax.eval_shape(
+        lambda k: T.init_params(k, cfg, max_seq=max_seq),
+        SDS((2,), np.uint32))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """All ShapeDtypeStruct inputs for the step this shape lowers."""
+    if shape.kind == "decode":
+        return decode_specs(cfg, shape)
+    return batch_specs(cfg, shape)

@@ -1,0 +1,36 @@
+"""Step functions lowered by the dry-run / executed by train.py & serve.py."""
+from __future__ import annotations
+
+import jax
+
+from repro.config import ModelConfig
+from repro.models import transformer as T
+from repro.training import optim
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: optim.OptimConfig,
+                    *, mode: str = "flash", moe_dispatch: str = "einsum",
+                    remat: bool = True):
+    def train_step(params, opt_state, batch):
+        def lf(p):
+            return T.loss_fn(p, cfg, batch, mode=mode,
+                             moe_dispatch=moe_dispatch, remat=remat)
+        (_, metrics), grads = jax.value_and_grad(lf, has_aux=True)(params)
+        params, opt_state, om = optim.adamw_update(params, grads, opt_state,
+                                                   opt_cfg)
+        return params, opt_state, {**metrics, **om}
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, *, mode: str = "flash",
+                      moe_dispatch: str = "einsum"):
+    def prefill_step(params, batch):
+        return T.prefill(params, cfg, batch, mode=mode,
+                         moe_dispatch=moe_dispatch)
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, cache, tokens, pos):
+        return T.decode_step(params, cfg, cache, tokens, pos)
+    return serve_step

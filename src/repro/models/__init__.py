@@ -1,0 +1,2 @@
+"""Model substrate: functional JAX model definitions for every assigned
+architecture family (dense / moe / hybrid / ssm / audio / vlm)."""

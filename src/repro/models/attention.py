@@ -1,0 +1,339 @@
+"""Attention: GQA/MQA, sliding-window, MLA (DeepSeek-V3), cross-attention.
+
+Three execution paths:
+  * ``chunked_attention`` — pure-jnp flash-style attention: a
+    ``lax.scan`` over query blocks with fp32 softmax, bounding peak
+    activation memory to (block_q x seq) instead of (seq x seq).  This is
+    the path the multi-pod dry-run lowers (TPU kernels cannot compile on
+    the CPU host platform); on real TPU ``repro.kernels.ops`` swaps in
+    the Pallas flash kernel.
+  * ``triangular`` — causal block-skipping variant (perf pass): query
+    blocks are unrolled and each attends only keys ``<= block_end``,
+    halving attention FLOPs vs the chunked path.
+  * decode — one query token against a (possibly ring-buffered) KV cache.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import layers as L
+from repro.models.flash import flash_attention
+from repro.models.pspec import shard
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, d_in: Optional[int] = None) -> dict:
+    """Standard GQA attention params. d_in overrides the input width
+    (zamba2's shared block consumes concat(hidden, embedding))."""
+    dt = L.dtype_of(cfg.param_dtype)
+    d = d_in or cfg.d_model
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "w_q": L.dense_init(ks[0], (d, cfg.n_heads * hd), dt),
+        "w_k": L.dense_init(ks[1], (d, cfg.n_kv_heads * hd), dt),
+        "w_v": L.dense_init(ks[2], (d, cfg.n_kv_heads * hd), dt),
+        "w_o": L.dense_init(ks[3], (cfg.n_heads * hd, cfg.d_model), dt),
+    }
+    if cfg.qkv_bias:
+        p["b_q"] = jnp.zeros((cfg.n_heads * hd,), dt)
+        p["b_k"] = jnp.zeros((cfg.n_kv_heads * hd,), dt)
+        p["b_v"] = jnp.zeros((cfg.n_kv_heads * hd,), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = L.init_rmsnorm(hd, dt)
+        p["k_norm"] = L.init_rmsnorm(hd, dt)
+    return p
+
+
+def init_mla(key, cfg: ModelConfig) -> dict:
+    """DeepSeek-V3 Multi-head Latent Attention [arXiv:2412.19437]."""
+    m = cfg.mla
+    dt = L.dtype_of(cfg.param_dtype)
+    d, H = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 6)
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "w_dq": L.dense_init(ks[0], (d, m.q_lora_rank), dt),
+        "q_norm": L.init_rmsnorm(m.q_lora_rank, dt),
+        "w_uq": L.dense_init(ks[1], (m.q_lora_rank, H * qk_head), dt),
+        # down-projection to the compressed latent + the shared rope key
+        "w_dkv": L.dense_init(ks[2], (d, m.kv_lora_rank + m.qk_rope_head_dim), dt),
+        "kv_norm": L.init_rmsnorm(m.kv_lora_rank, dt),
+        # up-projections from the latent: k_nope and v per head
+        "w_uk": L.dense_init(ks[3], (m.kv_lora_rank, H * m.qk_nope_head_dim), dt),
+        "w_uv": L.dense_init(ks[4], (m.kv_lora_rank, H * m.v_head_dim), dt),
+        "w_o": L.dense_init(ks[5], (H * m.v_head_dim, d), dt),
+    }
+
+
+# --------------------------------------------------------------------------
+# qkv projection helpers
+# --------------------------------------------------------------------------
+
+def _project_qkv(p: dict, cfg: ModelConfig, x, xkv=None):
+    hd = cfg.resolved_head_dim
+    B = x.shape[0]
+    xkv = x if xkv is None else xkv
+    q = x @ p["w_q"]
+    k = xkv @ p["w_k"]
+    v = xkv @ p["w_v"]
+    if "b_q" in p:
+        q, k, v = q + p["b_q"], k + p["b_k"], v + p["b_v"]
+    q = q.reshape(B, -1, cfg.n_heads, hd)
+    k = k.reshape(B, -1, cfg.n_kv_heads, hd)
+    v = v.reshape(B, -1, cfg.n_kv_heads, hd)
+    if "q_norm" in p:
+        q = L.rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = L.rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    q = shard(q, "batch", None, "model", None)
+    k = shard(k, "batch", None, "model", None)
+    v = shard(v, "batch", None, "model", None)
+    return q, k, v
+
+
+# --------------------------------------------------------------------------
+# chunked (flash-style) attention over full sequences
+# --------------------------------------------------------------------------
+
+def _grouped_scores(q, k):
+    """q: (B, Sq, Hkv, g, D), k: (B, Skv, Hkv, D) -> (B, Hkv, g, Sq, Skv)."""
+    return jnp.einsum("bqhgd,bkhd->bhgqk", q.astype(jnp.float32),
+                      k.astype(jnp.float32))
+
+
+def chunked_attention(q, k, v, *, causal: bool, q_offset=0,
+                      window: int = 0, kv_len: Optional[jax.Array] = None,
+                      block_q: int = 1024) -> jax.Array:
+    """Memory-bounded attention.  q: (B,Sq,H,D); k,v: (B,Skv,Hkv,D).
+
+    q_offset: absolute position of q[0] (prefill continuation / decode).
+    window: sliding-window size (0 = full).
+    kv_len: optional dynamic number of valid kv positions (decode).
+    """
+    B, Sq, H, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    g = H // Hkv
+    scale = D ** -0.5
+    qg = q.reshape(B, Sq, Hkv, g, D)
+    kv_pos = jnp.arange(Skv)
+
+    def block(qb, qpos):
+        # qb: (B, bq, Hkv, g, D); qpos: (bq,) absolute positions
+        s = _grouped_scores(qb, k) * scale            # (B,Hkv,g,bq,Skv)
+        mask = jnp.ones((qb.shape[1], Skv), bool)
+        if causal:
+            mask &= qpos[:, None] >= kv_pos[None, :]
+        if window:
+            mask &= (qpos[:, None] - kv_pos[None, :]) < window
+        if kv_len is not None:
+            mask &= kv_pos[None, :] < kv_len
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+        return o.astype(q.dtype)
+
+    if Sq <= block_q:
+        out = block(qg, q_offset + jnp.arange(Sq))
+    else:
+        nb = -(-Sq // block_q)
+        pad = nb * block_q - Sq
+        qp = jnp.pad(qg, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+        qp = qp.reshape(B, nb, block_q, Hkv, g, D).transpose(1, 0, 2, 3, 4, 5)
+        pos = (q_offset + jnp.arange(nb * block_q)).reshape(nb, block_q)
+
+        def body(_, xs):
+            qb, pb = xs
+            return None, block(qb, pb)
+
+        _, out = jax.lax.scan(body, None, (qp, pos))
+        Dv = out.shape[-1]
+        out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, nb * block_q, Hkv, g, Dv)
+        out = out[:, :Sq]
+    return out.reshape(B, Sq, H, -1)
+
+
+def triangular_attention(q, k, v, *, window: int = 0) -> jax.Array:
+    """Causal attention with static block skipping: query block i only
+    computes scores against keys [lo_i, (i+1)*bq) where lo_i honors the
+    sliding window.  Unrolled (static shapes per block) — ~2x fewer
+    attention FLOPs than ``chunked_attention`` for full causal, more for
+    windowed.  Used by the perf pass."""
+    B, Sq, H, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    g = H // Hkv
+    block_q = min(1024, Sq)
+    assert Sq % block_q == 0 and Sq == Skv, "triangular path needs aligned blocks"
+    nb = Sq // block_q
+    scale = D ** -0.5
+    qg = q.reshape(B, Sq, Hkv, g, D)
+    outs = []
+    for i in range(nb):
+        hi = (i + 1) * block_q
+        lo = 0
+        if window:
+            lo = max(0, (i * block_q + 1) - window)
+            lo = (lo // block_q) * block_q          # align to blocks
+        qb = qg[:, i * block_q:hi]
+        kb, vb = k[:, lo:hi], v[:, lo:hi]
+        qpos = jnp.arange(i * block_q, hi)
+        kpos = jnp.arange(lo, hi)
+        s = _grouped_scores(qb, kb) * scale
+        mask = qpos[:, None] >= kpos[None, :]
+        if window:
+            mask &= (qpos[:, None] - kpos[None, :]) < window
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhgqk,bkhd->bqhgd", p, vb.astype(jnp.float32))
+        outs.append(o.astype(q.dtype).reshape(B, block_q, H, -1))
+    return jnp.concatenate(outs, axis=1)
+
+
+# --------------------------------------------------------------------------
+# full-sequence forward (train / prefill)
+# --------------------------------------------------------------------------
+
+def attention_fwd(p: dict, cfg: ModelConfig, x, positions, *,
+                  causal: bool = True, window: int = 0,
+                  mode: str = "flash", xkv=None, rope: bool = True,
+                  return_kv: bool = False):
+    """Full-sequence attention.  Returns (out, (k, v) if return_kv).
+
+    mode="flash" (default): custom-vjp flash attention — O(S.D)
+    residuals, static causal block skipping.  mode="naive": the
+    reference softmax path (tests / ablation baseline)."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, cfg, x, xkv)
+    if rope:
+        sections = cfg.mrope_sections if cfg.mrope else None
+        q = L.apply_rope(q, positions, cfg.rope_theta, sections)
+        k = L.apply_rope(k, positions, cfg.rope_theta, sections)
+    if mode == "flash":
+        o = flash_attention(q, k, v, causal=causal, window=window)
+    else:
+        o = chunked_attention(q, k, v, causal=causal, window=window)
+    o = shard(o, "batch", None, "model", None)
+    out = o.reshape(B, S, -1) @ p["w_o"]
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+# --------------------------------------------------------------------------
+# single-token decode against a KV cache
+# --------------------------------------------------------------------------
+
+def attention_decode(p: dict, cfg: ModelConfig, x, cache_k, cache_v,
+                     pos, *, window: int = 0, xkv=None, rope: bool = True,
+                     rope_pos=None):
+    """x: (B, 1, d).  cache_k/v: (B, S_cache, Hkv, D) where S_cache is
+    ``window`` for sliding-window archs (ring buffer) else max_seq.
+    pos: scalar int32 — cache slot index (absolute sequence position).
+    rope_pos: rotary position if it differs from the slot index (VLM:
+    M-RoPE text positions restart after the patch grid)."""
+    B = x.shape[0]
+    hd = cfg.resolved_head_dim
+    q, k, v = _project_qkv(p, cfg, x, xkv)
+    if rope:
+        rp = pos if rope_pos is None else rope_pos
+        posv = jnp.full((B, 1), rp, jnp.int32)
+        sections = cfg.mrope_sections if cfg.mrope else None
+        if sections is not None:
+            posv = jnp.broadcast_to(posv, (3, B, 1))
+        q = L.apply_rope(q, posv, cfg.rope_theta, sections)
+        k = L.apply_rope(k, posv, cfg.rope_theta, sections)
+    S_cache = cache_k.shape[1]
+    slot = jnp.where(window > 0, pos % S_cache, pos) if window else pos
+    cache_k = jax.lax.dynamic_update_slice(cache_k, k, (0, slot, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(cache_v, v, (0, slot, 0, 0))
+    kv_len = jnp.minimum(pos + 1, S_cache)
+    # ring buffers hold an unordered window; softmax is order-invariant
+    # so masking by validity is sufficient (rope already encoded order).
+    o = chunked_attention(q, cache_k, cache_v, causal=False,
+                          kv_len=kv_len)
+    out = o.reshape(B, 1, -1) @ p["w_o"]
+    return out, cache_k, cache_v
+
+
+# --------------------------------------------------------------------------
+# MLA forward (expanded for train/prefill, absorbed for decode)
+# --------------------------------------------------------------------------
+
+def _mla_qkv(p, cfg, x, positions):
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ql = L.rmsnorm(p["q_norm"], x @ p["w_dq"], cfg.norm_eps)
+    q = (ql @ p["w_uq"]).reshape(B, S, H, qk_head)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = L.apply_rope(q_rope, positions, cfg.rope_theta)
+    dkv = x @ p["w_dkv"]
+    ckv, k_rope = jnp.split(dkv, [m.kv_lora_rank], axis=-1)
+    ckv = L.rmsnorm(p["kv_norm"], ckv, cfg.norm_eps)
+    k_rope = L.apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)
+    return q_nope, q_rope, ckv, k_rope[:, :, 0, :]
+
+
+def mla_fwd(p: dict, cfg: ModelConfig, x, positions, *, mode="flash",
+            return_cache: bool = False):
+    """Expanded MLA for train/prefill: reconstruct per-head k/v."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    q_nope, q_rope, ckv, k_rope = _mla_qkv(p, cfg, x, positions)
+    k_nope = (ckv @ p["w_uk"]).reshape(B, S, H, m.qk_nope_head_dim)
+    v = (ckv @ p["w_uv"]).reshape(B, S, H, m.v_head_dim)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, m.qk_rope_head_dim))],
+        axis=-1)
+    q = shard(q, "batch", None, "model", None)
+    k = shard(k, "batch", None, "model", None)
+    o = (flash_attention(q, k, v, causal=True) if mode == "flash"
+         else chunked_attention(q, k, v, causal=True))
+    out = o.reshape(B, S, -1) @ p["w_o"]
+    if return_cache:
+        return out, (ckv, k_rope)
+    return out
+
+
+def mla_decode(p: dict, cfg: ModelConfig, x, cache_ckv, cache_krope, pos):
+    """Absorbed MLA decode [arXiv:2412.19437 §2.1.1]: the k up-projection
+    is folded into the query and the v up-projection into the output, so
+    attention runs directly in the compressed (kv_lora_rank + rope) space
+    — the cache stores only (ckv, k_rope) per token."""
+    m = cfg.mla
+    B = x.shape[0]
+    H = cfg.n_heads
+    q_nope, q_rope, ckv, k_rope = _mla_qkv(
+        p, cfg, x, jnp.full((B, 1), pos, jnp.int32))
+    # cache update
+    cache_ckv = jax.lax.dynamic_update_slice(cache_ckv, ckv, (0, pos, 0))
+    cache_krope = jax.lax.dynamic_update_slice(cache_krope, k_rope, (0, pos, 0))
+    # absorb w_uk into q: (B,1,H,nope) x (lora,H,nope) -> (B,1,H,lora)
+    w_uk = p["w_uk"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
+    q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    s_lat = jnp.einsum("bqhr,bkr->bhqk", q_lat,
+                       cache_ckv.astype(jnp.float32))
+    s_rope = jnp.einsum("bqhd,bkd->bhqk", q_rope.astype(jnp.float32),
+                        cache_krope.astype(jnp.float32))
+    s = (s_lat + s_rope) * scale
+    kv_pos = jnp.arange(cache_ckv.shape[1])
+    s = jnp.where(kv_pos[None, None, None, :] <= pos, s, NEG_INF)
+    prob = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhqk,bkr->bqhr", prob, cache_ckv.astype(jnp.float32))
+    w_uv = p["w_uv"].reshape(m.kv_lora_rank, H, m.v_head_dim)
+    o = jnp.einsum("bqhr,rhd->bqhd", ctx, w_uv.astype(jnp.float32))
+    out = o.astype(x.dtype).reshape(B, 1, -1) @ p["w_o"]
+    return out, cache_ckv, cache_krope

@@ -1,0 +1,31 @@
+"""Parameter counting via jax.eval_shape over the real init (always
+consistent with the actual model), with an analytic correction for MoE
+active-parameter counts (MODEL_FLOPS = 6 * N_active * D)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import numpy as np
+
+from repro.config import ModelConfig
+
+
+@functools.lru_cache(maxsize=64)
+def _shapes(cfg: ModelConfig, max_seq: int):
+    from repro.models.transformer import init_params
+    return jax.eval_shape(
+        lambda k: init_params(k, cfg, max_seq=max_seq),
+        jax.ShapeDtypeStruct((2,), np.uint32))
+
+
+def count_params(cfg: ModelConfig, active_only: bool = False,
+                 max_seq: int = 4096) -> int:
+    tree = _shapes(cfg, max_seq)
+    total = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+    if active_only and cfg.moe is not None:
+        m = cfg.moe
+        n_moe_layers = cfg.n_layers - m.n_dense_layers
+        per_expert = 3 * cfg.d_model * m.d_expert
+        total -= n_moe_layers * (m.n_experts - m.experts_per_token) * per_expert
+    return total

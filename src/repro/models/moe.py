@@ -1,0 +1,179 @@
+"""Mixture-of-Experts MLP with expert-parallel sharding.
+
+Two dispatch strategies (selectable, compared in EXPERIMENTS.md §Perf):
+
+* ``einsum`` — GShard-style grouped one-hot dispatch/combine matmuls
+  [arXiv:2006.16668].  TPU-friendly, but the dispatch einsum costs
+  ``2·G·E·C·d`` FLOPs per group — real compute burned on one-hot zeros.
+* ``scatter`` — capacity-bounded scatter/gather dispatch: tokens are
+  placed into their (expert, slot) row via a static-shape scatter-add,
+  O(T·d) data movement and ZERO matmul FLOPs.  The beyond-paper
+  optimization used after the perf pass.
+
+Experts are sharded over the "expert" logical axis (-> mesh "model");
+tokens arrive sharded over "batch" (-> "data"), so GSPMD materializes
+the all-to-all on the dispatched activations.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import layers as L
+from repro.models.pspec import shard
+
+CAPACITY_FACTOR = 1.25
+
+
+def init_moe(key, cfg: ModelConfig) -> dict:
+    m = cfg.moe
+    dt = L.dtype_of(cfg.param_dtype)
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": L.dense_init(ks[0], (d, m.n_experts), jnp.float32),
+        "w_gate": L.dense_init(ks[1], (m.n_experts, d, m.d_expert), dt),
+        "w_up": L.dense_init(ks[2], (m.n_experts, d, m.d_expert), dt),
+        "w_down": L.dense_init(ks[3], (m.n_experts, m.d_expert, d), dt),
+    }
+    if m.n_shared_experts:
+        p["shared"] = L.init_swiglu(
+            ks[4], d, m.n_shared_experts * m.d_shared_expert, dt)
+    return p
+
+
+def _route(p, cfg, x2d):
+    """x2d: (T, d) -> (probs (T,k), experts (T,k), aux_loss, full_probs)."""
+    m = cfg.moe
+    logits = (x2d.astype(jnp.float32) @ p["router"])          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, m.experts_per_token)   # (T, k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)     # renormalize
+    # GShard/Switch load-balance loss: E * sum_e f_e * P_e
+    assign = jax.nn.one_hot(top_e, m.n_experts).sum(1)         # (T, E)
+    f = assign.mean(0) / m.experts_per_token
+    P = probs.mean(0)
+    aux = m.n_experts * jnp.sum(f * P) * m.router_aux_loss
+    return top_p, top_e, aux, probs
+
+
+def _capacity(cfg, tokens_per_group: int) -> int:
+    m = cfg.moe
+    c = int(tokens_per_group * m.experts_per_token * CAPACITY_FACTOR / m.n_experts)
+    return max(4, -(-c // 4) * 4)          # round up to a multiple of 4
+
+
+def _expert_ffn(p, xe):
+    """xe: (..., E, C, d) -> gated FFN per expert (weights stacked on E)."""
+    h = jnp.einsum("...ecd,edf->...ecf", xe, p["w_gate"])
+    u = jnp.einsum("...ecd,edf->...ecf", xe, p["w_up"])
+    h = jax.nn.silu(h.astype(jnp.float32)).astype(xe.dtype) * u
+    return jnp.einsum("...ecf,efd->...ecd", h, p["w_down"])
+
+
+def moe_fwd(p: dict, cfg: ModelConfig, x, *, dispatch: str = "einsum",
+            group_size: int = 2048) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d).  Returns (y, aux_loss)."""
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    x2d = x.reshape(T, d)
+    top_p, top_e, aux, _ = _route(p, cfg, x2d)
+
+    # grouping: keep >=16 groups so the group axis of the dispatched
+    # tensor shards over the data axis — without this the dispatch output
+    # is all-gathered across data (§Perf B3: 3.2x on deepseek train).
+    # Decode-scale token counts (T < 16*G) keep a single group: splitting
+    # tiny batches regressed decode 4x (§Perf C5).
+    if T >= 16 * group_size:
+        G = group_size
+        while G > 1 and (T % G or T // G < 16):
+            G //= 2
+        G = max(G, 1)
+    else:
+        G = T
+    n = T // G
+    C = _capacity(cfg, G)
+    xg = x2d.reshape(n, G, d)
+    eg = top_e.reshape(n, G, m.experts_per_token)
+    pg = top_p.reshape(n, G, m.experts_per_token)
+
+    if dispatch == "einsum":
+        y = _dispatch_einsum(p, cfg, xg, eg, pg, C)
+    elif dispatch == "scatter":
+        y = _dispatch_scatter(p, cfg, xg, eg, pg, C)
+    else:
+        raise ValueError(dispatch)
+    y = y.reshape(B, S, d)
+
+    if m.n_shared_experts:
+        y = y + L.swiglu(p["shared"], x)
+    return y, aux
+
+
+def _slot_positions(eg, n_experts):
+    """Position of each (token, k) routing within its expert's slots.
+    eg: (n, G, k) -> (n, G, k) int32 cumulative index per expert."""
+    n, G, k = eg.shape
+    flat = eg.reshape(n, G * k)
+    onehot = jax.nn.one_hot(flat, n_experts, dtype=jnp.int32)   # (n, G*k, E)
+    pos = jnp.cumsum(onehot, axis=1) - 1                        # 0-based
+    pos = jnp.take_along_axis(pos, flat[..., None], axis=-1)[..., 0]
+    return pos.reshape(n, G, k)
+
+
+def _dispatch_einsum(p, cfg, xg, eg, pg, C):
+    """GShard one-hot dispatch.  xg: (n, G, d)."""
+    m = cfg.moe
+    n, G, d = xg.shape
+    pos = _slot_positions(eg, m.n_experts)                     # (n, G, k)
+    keep = pos < C
+    e_oh = jax.nn.one_hot(eg, m.n_experts, dtype=xg.dtype)     # (n,G,k,E)
+    c_oh = jax.nn.one_hot(pos, C, dtype=xg.dtype)              # (n,G,k,C)
+    disp = jnp.einsum("ngke,ngkc->ngec", e_oh * keep[..., None], c_oh)
+    # combine weights in the activation dtype: f32 here would upcast the
+    # dispatched tensor and DOUBLE the cross-device bytes (§Perf B3)
+    comb = jnp.einsum("ngke,ngkc,ngk->ngec",
+                      e_oh, c_oh, (pg * keep).astype(xg.dtype))
+    xe = jnp.einsum("ngec,ngd->necd", disp, xg)                # (n,E,C,d)
+    # groups over "batch"(data), experts over "expert"(model): without the
+    # group-axis constraint GSPMD all-gathers xe across data (§Perf B3)
+    xe = shard(xe, "batch", "expert", None, None)
+    he = _expert_ffn(p, xe)
+    he = shard(he, "batch", "expert", None, None)
+    return jnp.einsum("ngec,necd->ngd", comb, he)
+
+
+def _dispatch_scatter(p, cfg, xg, eg, pg, C):
+    """Scatter/gather dispatch: zero matmul FLOPs in routing."""
+    m = cfg.moe
+    n, G, d = xg.shape
+    k = m.experts_per_token
+    pos = _slot_positions(eg, m.n_experts)                     # (n, G, k)
+    keep = pos < C
+    # flat slot id per routing decision; dropped tokens go to a trash row
+    slot = eg * C + jnp.clip(pos, 0, C - 1)                    # (n, G, k)
+    slot = jnp.where(keep, slot, m.n_experts * C)
+    xrep = jnp.broadcast_to(xg[:, :, None, :], (n, G, k, d))
+
+    def per_group(slots, xr):
+        buf = jnp.zeros((m.n_experts * C + 1, d), xg.dtype)
+        buf = buf.at[slots.reshape(-1)].add(xr.reshape(-1, d))
+        return buf[:-1]
+
+    xe = jax.vmap(per_group)(slot, xrep).reshape(n, m.n_experts, C, d)
+    xe = shard(xe, "batch", "expert", None, None)
+    he = _expert_ffn(p, xe)
+    he = shard(he, "batch", "expert", None, None)
+    he = he.reshape(n, m.n_experts * C, d)
+
+    def per_group_combine(h, slots, w):
+        got = h[jnp.clip(slots.reshape(-1), 0, m.n_experts * C - 1)]
+        got = got.reshape(G, k, d) * w[..., None].astype(h.dtype)
+        return got.sum(1)
+
+    w = jnp.where(keep, pg, 0.0)
+    return jax.vmap(per_group_combine)(he, slot, w)

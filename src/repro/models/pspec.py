@@ -1,0 +1,112 @@
+"""Logical-axis sharding annotations.
+
+Model code annotates activations/params with *logical* axis names
+("batch", "model", "expert", ...).  The launch layer installs rules that
+map logical names to physical mesh axes; outside any rules (unit tests,
+single device) the annotations are no-ops.
+
+Divisibility-aware: a logical annotation is dropped for a tensor dim
+whose size is not divisible by the mapped mesh-axis size (e.g. 15 query
+heads cannot shard over model=16 — smollm falls back to replicated
+heads; see DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import math
+from contextlib import contextmanager
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis name -> tuple of physical mesh axes
+DEFAULT_LOGICAL_MAP = {
+    "batch": ("pod", "data"),      # pod dropped when absent from the mesh
+    "fsdp": ("pod", "data"),       # optimizer/param state shards over the
+                                   # pod axis too: deepseek train state is
+                                   # 17.5 GB/dev on one pod, 9 GB/dev on two
+    "model": ("model",),
+    "expert": ("model",),
+    "seq": ("model",),             # sequence sharding (MQA KV caches)
+}
+
+_STATE: dict = {"mesh": None, "map": None}
+
+
+def set_mesh_rules(mesh: Optional[Mesh], logical_map=None) -> None:
+    _STATE["mesh"] = mesh
+    _STATE["map"] = dict(logical_map or DEFAULT_LOGICAL_MAP)
+
+
+@contextmanager
+def mesh_rules(mesh: Optional[Mesh], logical_map=None):
+    prev = dict(_STATE)
+    set_mesh_rules(mesh, logical_map)
+    try:
+        yield
+    finally:
+        _STATE.update(prev)
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _STATE["mesh"]
+
+
+def _resolve(logical: Optional[str], dim_size: int, mesh: Mesh):
+    """Map a logical name to the subset of physical axes that exist in the
+    mesh and evenly divide dim_size."""
+    if logical is None:
+        return None
+    axes = _STATE["map"].get(logical, (logical,))
+    present = [a for a in axes if a in mesh.shape]
+    if not present:
+        return None
+    factor = math.prod(mesh.shape[a] for a in present)
+    if dim_size % factor != 0:
+        # drop trailing axes until it divides (or give up)
+        while present:
+            present.pop()
+            factor = math.prod(mesh.shape[a] for a in present) if present else 1
+            if present and dim_size % factor == 0:
+                break
+        if not present:
+            return None
+    return tuple(present) if len(present) > 1 else present[0]
+
+
+def pspec_for(shape: Sequence[int], logical: Sequence[Optional[str]]) -> Optional[P]:
+    mesh = _STATE["mesh"]
+    if mesh is None:
+        return None
+    assert len(shape) == len(logical), (shape, logical)
+    used: set = set()
+    entries = []
+    for size, name in zip(shape, logical):
+        axes = _resolve(name, size, mesh)
+        # a physical axis may appear only once in a PartitionSpec
+        if axes is not None:
+            flat = axes if isinstance(axes, tuple) else (axes,)
+            if any(a in used for a in flat):
+                axes = None
+            else:
+                used.update(flat)
+        entries.append(axes)
+    return P(*entries)
+
+
+def shard(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Annotate an intermediate with logical sharding (no-op without rules)."""
+    mesh = _STATE["mesh"]
+    if mesh is None:
+        return x
+    spec = pspec_for(x.shape, logical)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(shape, logical) -> Optional[NamedSharding]:
+    mesh = _STATE["mesh"]
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, pspec_for(shape, logical))

@@ -1,0 +1,192 @@
+"""Mamba2 (SSD) block — chunked selective-scan in pure JAX.
+
+State-space recurrence per head h with state size N and head dim P:
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * (B_t ⊗ x_t)        (P, N)
+    y_t = C_t · h_t + D * x_t
+computed chunk-parallel (SSD algorithm [arXiv:2405.21060]): quadratic
+attention-like form within chunks, a sequential scan across chunk
+states.  ``repro.kernels.ssm_scan`` is the Pallas TPU version of the
+intra-chunk part; this module is also its oracle's substrate.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import layers as L
+from repro.models.pspec import shard
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    return d_inner, n_heads
+
+
+def init_mamba2(key, cfg: ModelConfig) -> dict:
+    s = cfg.ssm
+    dt = L.dtype_of(cfg.param_dtype)
+    d = cfg.d_model
+    d_inner, nh = _dims(cfg)
+    conv_ch = d_inner + 2 * s.n_groups * s.d_state
+    ks = jax.random.split(key, 4)
+    # dt bias: inverse-softplus of dt ~ U[1e-3, 1e-1]
+    u = jax.random.uniform(ks[2], (nh,), jnp.float32, 1e-3, 1e-1)
+    dt_bias = u + jnp.log(-jnp.expm1(-u))
+    return {
+        "in_proj": L.dense_init(
+            ks[0], (d, 2 * d_inner + 2 * s.n_groups * s.d_state + nh), dt),
+        "conv_w": (jax.random.normal(ks[1], (s.d_conv, conv_ch), jnp.float32)
+                   * (1.0 / s.d_conv ** 0.5)).astype(dt),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "A_log": jnp.log(jax.random.uniform(ks[3], (nh,), jnp.float32, 1.0, 16.0)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": dt_bias,
+        "norm": L.init_rmsnorm(d_inner, dt),
+        "out_proj": L.dense_init(ks[0], (d_inner, d), dt),
+    }
+
+
+def _split_proj(p, cfg, x):
+    s = cfg.ssm
+    d_inner, nh = _dims(cfg)
+    gn = s.n_groups * s.d_state
+    zxbcdt = x @ p["in_proj"]
+    z, xin, Bm, Cm, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + gn, 2 * d_inner + 2 * gn],
+        axis=-1)
+    return z, xin, Bm, Cm, dt
+
+
+def causal_conv(x, w, b):
+    """Depthwise causal conv.  x: (B, S, C); w: (K, C)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(K):
+        out = out + xp[:, i:i + x.shape[1]].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def ssd_chunked(xh, dt, A, Bm, Cm, chunk: int,
+                h0: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    xh: (B,S,H,P)  dt: (B,S,H) (post-softplus)  A: (H,) negative
+    Bm, Cm: (B,S,H,N)  (already broadcast from groups to heads)
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    Bt, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    Lc = min(chunk, S)
+    assert S % Lc == 0, (S, Lc)
+    nc = S // Lc
+
+    f32 = jnp.float32
+    xc = xh.reshape(Bt, nc, Lc, H, P).astype(f32)
+    dtc = dt.reshape(Bt, nc, Lc, H).astype(f32)
+    Bc = Bm.reshape(Bt, nc, Lc, H, N).astype(f32)
+    Cc = Cm.reshape(Bt, nc, Lc, H, N).astype(f32)
+
+    loga = dtc * A[None, None, None, :]                  # (B,nc,Lc,H) <= 0
+    cum = jnp.cumsum(loga, axis=2)                       # l_t
+
+    # intra-chunk quadratic form; decay[t,s] = l_t - l_s
+    Smat = jnp.einsum("bclhn,bcshn->bchls", Cc, Bc)      # (B,nc,H,Lc,Lc)
+    lt = cum.transpose(0, 1, 3, 2)                       # (B,nc,H,Lc)
+    decay = lt[..., :, None] - lt[..., None, :]          # (B,nc,H,Lc,Lc)
+    tri = jnp.tril(jnp.ones((Lc, Lc), bool))
+    W = jnp.where(tri, Smat * jnp.exp(decay), 0.0)
+    W = W * dtc.transpose(0, 1, 3, 2)[..., None, :]      # * dt_s
+    y_intra = jnp.einsum("bchls,bcshp->bclhp", W, xc)
+
+    # per-chunk end state:  sum_s exp(l_L - l_s) dt_s B_s (x) x_s
+    wS = jnp.exp(lt[..., -1:] - lt) * dtc.transpose(0, 1, 3, 2)   # (B,nc,H,Lc)
+    hc = jnp.einsum("bchs,bcshn,bcshp->bchpn", wS, Bc, xc)
+
+    # inter-chunk sequential scan
+    chunk_decay = jnp.exp(lt[..., -1])                   # (B,nc,H)
+    h_init = (jnp.zeros((Bt, H, P, N), f32) if h0 is None
+              else h0.astype(f32))
+
+    def body(h, inp):
+        dec, hck = inp                                    # (B,H), (B,H,P,N)
+        h_new = h * dec[..., None, None] + hck
+        return h_new, h
+
+    final, h_prevs = jax.lax.scan(
+        body, h_init, (chunk_decay.swapaxes(0, 1), hc.swapaxes(0, 1)))
+    h_prevs = h_prevs.swapaxes(0, 1)           # (B,nc,H,P,N) state before chunk
+
+    y_inter = jnp.einsum("bclhn,bchpn->bclhp",
+                         Cc * jnp.exp(cum)[..., None], h_prevs)
+    y = (y_intra + y_inter).reshape(Bt, S, H, P)
+    return y, final
+
+
+def mamba2_fwd(p: dict, cfg: ModelConfig, x, *, return_state: bool = False):
+    """Full-sequence Mamba2 block.  x: (B, S, d)."""
+    s = cfg.ssm
+    d_inner, nh = _dims(cfg)
+    B, S, _ = x.shape
+    z, xin, Bm, Cm, dt = _split_proj(p, cfg, x)
+    xbc_pre = jnp.concatenate([xin, Bm, Cm], axis=-1)   # pre-conv (cached)
+    xbc = jax.nn.silu(causal_conv(xbc_pre, p["conv_w"], p["conv_b"]).astype(jnp.float32)).astype(x.dtype)
+    xin, Bm, Cm = jnp.split(xbc, [d_inner, d_inner + s.n_groups * s.d_state], axis=-1)
+
+    xh = xin.reshape(B, S, nh, s.head_dim)
+    xh = shard(xh, "batch", None, "model", None)
+    rep = nh // s.n_groups
+    Bh = jnp.repeat(Bm.reshape(B, S, s.n_groups, s.d_state), rep, axis=2)
+    Ch = jnp.repeat(Cm.reshape(B, S, s.n_groups, s.d_state), rep, axis=2)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    y, state = ssd_chunked(xh, dtv, A, Bh, Ch, s.chunk)
+    y = y + xh.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.astype(x.dtype).reshape(B, S, d_inner)
+    y = L.rmsnorm(p["norm"], y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                  cfg.norm_eps)
+    out = y @ p["out_proj"]
+    if return_state:
+        return out, {"ssm": state, "conv": xbc_pre[:, -(s.d_conv - 1):]}
+    return out
+
+
+def mamba2_decode(p: dict, cfg: ModelConfig, x, cache: dict):
+    """Single-token recurrent step.  x: (B, 1, d).
+    cache: {"ssm": (B,H,P,N) f32, "conv": (B, d_conv-1, conv_ch)}."""
+    s = cfg.ssm
+    d_inner, nh = _dims(cfg)
+    B = x.shape[0]
+    z, xin, Bm, Cm, dt = _split_proj(p, cfg, x)
+    xbc = jnp.concatenate([xin, Bm, Cm], axis=-1)        # (B,1,conv_ch)
+    win = jnp.concatenate([cache["conv"], xbc], axis=1)  # (B,d_conv,ch)
+    conv_out = (jnp.einsum("bkc,kc->bc", win.astype(jnp.float32),
+                           p["conv_w"].astype(jnp.float32))
+                + p["conv_b"].astype(jnp.float32))
+    xbc = jax.nn.silu(conv_out)[:, None, :].astype(x.dtype)
+    new_conv = win[:, 1:]
+    xin2, Bm2, Cm2 = jnp.split(
+        xbc, [d_inner, d_inner + s.n_groups * s.d_state], axis=-1)
+
+    xh = xin2.reshape(B, nh, s.head_dim).astype(jnp.float32)
+    rep = nh // s.n_groups
+    Bh = jnp.repeat(Bm2.reshape(B, s.n_groups, s.d_state), rep, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(Cm2.reshape(B, s.n_groups, s.d_state), rep, axis=1).astype(jnp.float32)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32)[:, 0] + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    h = cache["ssm"].astype(jnp.float32)
+    decay = jnp.exp(dtv * A)                              # (B,H)
+    h = (h * decay[..., None, None]
+         + jnp.einsum("bh,bhn,bhp->bhpn", dtv, Bh, xh))
+    y = jnp.einsum("bhn,bhpn->bhp", Ch, h) + xh * p["D"][None, :, None]
+    y = y.reshape(B, 1, d_inner).astype(x.dtype)
+    y = L.rmsnorm(p["norm"], y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                  cfg.norm_eps)
+    out = y @ p["out_proj"]
+    return out, {"ssm": h, "conv": new_conv}

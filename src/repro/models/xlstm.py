@@ -1,0 +1,309 @@
+"""xLSTM blocks [arXiv:2405.04517]: mLSTM (matrix memory, chunkwise
+parallel) and sLSTM (scalar memory, sequential scan).
+
+mLSTM cell per head (dqk = dv = d_inner / n_heads):
+    m_t = max(logsig(f~_t) + m_{t-1}, i~_t)
+    C_t = e^{logsig(f~)+m_{t-1}-m_t} C_{t-1} + e^{i~-m_t} k_t v_t^T
+    n_t = (same decays) n_{t-1} + e^{i~-m_t} k_t
+    h_t = (C_t^T q_t) / max(|n_t . q_t|, e^{-m_t})
+computed here in the stabilized chunkwise form (quadratic within chunks,
+scan across chunk states).  sLSTM is inherently sequential (that is its
+point in the paper) — a lax.scan over time; noted in the roofline
+analysis as the non-parallelizable fraction of xlstm-1.3b.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import layers as L
+from repro.models.ssm import causal_conv
+from repro.models.pspec import shard
+
+F32 = jnp.float32
+_MFLOOR = -30.0            # numeric floor for the log-space stabilizer
+
+
+def mlstm_dims(cfg: ModelConfig):
+    x = cfg.xlstm
+    d_inner = int(x.proj_factor_mlstm * cfg.d_model)
+    dh = d_inner // cfg.n_heads
+    return d_inner, cfg.n_heads, dh
+
+
+# ==========================================================================
+# mLSTM
+# ==========================================================================
+
+def init_mlstm_block(key, cfg: ModelConfig) -> dict:
+    x = cfg.xlstm
+    dt = L.dtype_of(cfg.param_dtype)
+    d = cfg.d_model
+    d_inner, nh, dh = mlstm_dims(cfg)
+    ks = jax.random.split(key, 7)
+    return {
+        "norm": L.init_rmsnorm(d, dt),
+        "w_up": L.dense_init(ks[0], (d, 2 * d_inner), dt),   # (main, gate)
+        "conv_w": (jax.random.normal(ks[1], (x.d_conv, d_inner), F32)
+                   * (1.0 / x.d_conv ** 0.5)).astype(dt),
+        "conv_b": jnp.zeros((d_inner,), dt),
+        # head-wise (block-diagonal) q/k/v projections, as in the official
+        # xLSTM implementation: (nh, dh, dh) instead of (d_inner, d_inner)
+        "w_q": (jax.random.normal(ks[2], (nh, dh, dh), F32) / dh ** 0.5).astype(dt),
+        "w_k": (jax.random.normal(ks[3], (nh, dh, dh), F32) / dh ** 0.5).astype(dt),
+        "w_v": (jax.random.normal(ks[4], (nh, dh, dh), F32) / dh ** 0.5).astype(dt),
+        # scalar input/forget gate pre-activations per head
+        "w_if": L.dense_init(ks[5], (d_inner, 2 * nh), dt),
+        "b_if": jnp.concatenate([jnp.zeros((nh,)),
+                                 3.0 * jnp.ones((nh,))]).astype(F32),
+        "skip": jnp.ones((d_inner,), dt),
+        "gn": L.init_rmsnorm(dh, dt),                        # per-head norm
+        "w_down": L.dense_init(ks[6], (d_inner, d), dt),
+    }
+
+
+def mlstm_chunked(q, k, v, igate, fgate, chunk: int,
+                  state: Optional[Tuple] = None):
+    """q,k,v: (B,S,H,D); igate/fgate: (B,S,H) pre-activations.
+    Returns (h (B,S,H,D), (C, n, m) final state)."""
+    B, S, H, D = q.shape
+    Lc = min(chunk, S)
+    assert S % Lc == 0, (S, Lc)
+    nc = S // Lc
+    scale = D ** -0.5
+
+    qc = q.reshape(B, nc, Lc, H, D).astype(F32) * scale
+    kc = k.reshape(B, nc, Lc, H, D).astype(F32)
+    vc = v.reshape(B, nc, Lc, H, D).astype(F32)
+    ig = igate.reshape(B, nc, Lc, H).astype(F32)
+    lf = jax.nn.log_sigmoid(fgate.reshape(B, nc, Lc, H).astype(F32))
+    b = jnp.cumsum(lf, axis=2)                            # (B,nc,Lc,H)
+
+    # intra-chunk log weights  Lw[t,s] = b_t - b_s + i_s  for s <= t
+    bT = b.transpose(0, 1, 3, 2)                          # (B,nc,H,Lc)
+    igT = ig.transpose(0, 1, 3, 2)
+    Lw = bT[..., :, None] - bT[..., None, :] + igT[..., None, :]
+    tri = jnp.tril(jnp.ones((Lc, Lc), bool))
+    Lw = jnp.where(tri, Lw, -jnp.inf)
+
+    if state is None:
+        C0 = jnp.zeros((B, H, D, D), F32)
+        n0 = jnp.zeros((B, H, D), F32)
+        m0 = jnp.full((B, H), -jnp.inf, F32)
+    else:
+        C0, n0, m0 = (s.astype(F32) for s in state)
+
+    def body(carry, inp):
+        C, n, m = carry
+        qb, kb, vb, bb, igb, Lwb = inp
+        # bb: (B,Lc,H); Lwb: (B,H,Lc,Lc)
+        intra_max = jnp.max(Lwb, axis=-1)                 # (B,H,Lc)
+        inter = bb.transpose(0, 2, 1) + m[..., None]      # (B,H,Lc)
+        mt = jnp.maximum(jnp.maximum(intra_max, inter), _MFLOOR)
+        wI = jnp.exp(Lwb - mt[..., None])                 # (B,H,Lc,Lc)
+        wX = jnp.exp(inter - mt)                          # (B,H,Lc)
+
+        sc = jnp.einsum("blhd,bshd->bhls", qb, kb) * wI
+        h_num = (jnp.einsum("bhls,bshd->blhd", sc, vb)
+                 + jnp.einsum("blhd,bhde->blhe", qb, C)
+                 * wX.transpose(0, 2, 1)[..., None])
+        denom = (jnp.sum(sc, axis=-1)
+                 + jnp.einsum("blhd,bhd->bhl", qb, n) * wX)  # (B,H,Lc)
+        denom = jnp.maximum(jnp.abs(denom), jnp.exp(-mt))
+        h = h_num / denom.transpose(0, 2, 1)[..., None]   # (B,Lc,H,D)
+
+        # chunk-end state update
+        bL = bb[:, -1]                                    # (B,H)
+        st = bL[:, None, :] - bb + igb                    # (B,Lc,H)
+        m_new = jnp.maximum(jnp.maximum(bL + m, jnp.max(st, axis=1)), _MFLOOR)
+        wS = jnp.exp(st - m_new[:, None, :])              # (B,Lc,H)
+        carry_w = jnp.exp(bL + m - m_new)                 # (B,H)
+        C_new = (C * carry_w[..., None, None]
+                 + jnp.einsum("bsh,bshd,bshe->bhde", wS, kb, vb))
+        n_new = (n * carry_w[..., None]
+                 + jnp.einsum("bsh,bshd->bhd", wS, kb))
+        return (C_new, n_new, m_new), h
+
+    xs = (qc.swapaxes(0, 1), kc.swapaxes(0, 1), vc.swapaxes(0, 1),
+          b.swapaxes(0, 1), ig.swapaxes(0, 1), Lw.swapaxes(0, 1))
+    (C, n, m), hs = jax.lax.scan(body, (C0, n0, m0), xs)
+    h = hs.swapaxes(0, 1).reshape(B, S, H, D)
+    return h, (C, n, m)
+
+
+def mlstm_block_fwd(p: dict, cfg: ModelConfig, x, *, return_state=False):
+    d_inner, nh, dh = mlstm_dims(cfg)
+    B, S, d = x.shape
+    xn = L.rmsnorm(p["norm"], x, cfg.norm_eps)
+    x_main, z = jnp.split(xn @ p["w_up"], 2, axis=-1)
+    x_main = shard(x_main, "batch", None, "model")
+    conv = jax.nn.silu(
+        causal_conv(x_main, p["conv_w"], p["conv_b"]).astype(F32)).astype(x.dtype)
+    convh = conv.reshape(B, S, nh, dh)
+    mainh = x_main.reshape(B, S, nh, dh)
+    q = jnp.einsum("bshd,hde->bshe", convh, p["w_q"])
+    k = jnp.einsum("bshd,hde->bshe", convh, p["w_k"])
+    v = jnp.einsum("bshd,hde->bshe", mainh, p["w_v"])
+    gif = (x_main @ p["w_if"]).astype(F32) + p["b_if"]
+    ig, fg = jnp.split(gif, 2, axis=-1)                   # (B,S,nh)
+    h, state = mlstm_chunked(q, k, v, ig, fg, chunk=min(256, S))
+    h = L.rmsnorm(p["gn"], h.astype(x.dtype), cfg.norm_eps)
+    h = h.reshape(B, S, d_inner) + conv * p["skip"]
+    h = h * jax.nn.silu(z.astype(F32)).astype(x.dtype)
+    out = x + h @ p["w_down"]
+    if return_state:
+        C, n, m = state
+        return out, {"C": C, "n": n, "m": m,
+                     "conv": x_main[:, -(cfg.xlstm.d_conv - 1):]}
+    return out
+
+
+def mlstm_block_decode(p: dict, cfg: ModelConfig, x, cache: dict):
+    """Sequential mLSTM step.  x: (B, 1, d)."""
+    d_inner, nh, dh = mlstm_dims(cfg)
+    B = x.shape[0]
+    xn = L.rmsnorm(p["norm"], x, cfg.norm_eps)
+    x_main, z = jnp.split(xn @ p["w_up"], 2, axis=-1)     # (B,1,d_inner)
+    win = jnp.concatenate([cache["conv"].astype(x.dtype), x_main], axis=1)
+    conv = (jnp.einsum("bkc,kc->bc", win.astype(F32),
+                       p["conv_w"].astype(F32)) + p["conv_b"].astype(F32))
+    conv = jax.nn.silu(conv)[:, None, :].astype(x.dtype)
+    convh = conv.reshape(B, nh, dh)
+    mainh = x_main.reshape(B, nh, dh)
+    q = jnp.einsum("bhd,hde->bhe", convh, p["w_q"]).astype(F32) * dh ** -0.5
+    k = jnp.einsum("bhd,hde->bhe", convh, p["w_k"]).astype(F32)
+    v = jnp.einsum("bhd,hde->bhe", mainh, p["w_v"]).astype(F32)
+    gif = (x_main @ p["w_if"]).astype(F32)[:, 0] + p["b_if"]
+    ig, fg = jnp.split(gif, 2, axis=-1)                   # (B,nh)
+    lf = jax.nn.log_sigmoid(fg)
+    C, n, m = (cache["C"].astype(F32), cache["n"].astype(F32),
+               cache["m"].astype(F32))
+    m_new = jnp.maximum(jnp.maximum(lf + m, ig), _MFLOOR)
+    wf = jnp.exp(lf + m - m_new)
+    wi = jnp.exp(ig - m_new)
+    C = (C * wf[..., None, None]
+         + wi[..., None, None] * k[..., None] * v[..., None, :])
+    n = n * wf[..., None] + wi[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n)),
+                      jnp.exp(-m_new))[..., None]
+    h = (num / den).astype(x.dtype)
+    h = L.rmsnorm(p["gn"], h, cfg.norm_eps).reshape(B, 1, d_inner)
+    h = h + conv * p["skip"]
+    h = h * jax.nn.silu(z.astype(F32)).astype(x.dtype)
+    out = x + h @ p["w_down"]
+    return out, {"C": C, "n": n, "m": m_new, "conv": win[:, 1:]}
+
+
+# ==========================================================================
+# sLSTM
+# ==========================================================================
+
+def init_slstm_block(key, cfg: ModelConfig) -> dict:
+    x = cfg.xlstm
+    dt = L.dtype_of(cfg.param_dtype)
+    d = cfg.d_model
+    nh = cfg.n_heads
+    dh = d // nh
+    d_ff = int(x.proj_factor_slstm * d)
+    ks = jax.random.split(key, 4)
+    return {
+        "norm": L.init_rmsnorm(d, dt),
+        "conv_w": (jax.random.normal(ks[0], (x.d_conv, d), F32)
+                   * (1.0 / x.d_conv ** 0.5)).astype(dt),
+        "conv_b": jnp.zeros((d,), dt),
+        "w_gates": L.dense_init(ks[1], (d, 4 * d), dt),   # z, i, f, o streams
+        # block-diagonal recurrent weights per head: (4, nh, dh, dh)
+        "r_gates": (jax.random.normal(ks[2], (4, nh, dh, dh), F32)
+                    * (1.0 / dh ** 0.5)).astype(dt),
+        "b_gates": jnp.concatenate(
+            [jnp.zeros((2 * d,)), 3.0 * jnp.ones((d,)),
+             jnp.zeros((d,))]).astype(F32),
+        "gn": L.init_rmsnorm(dh, dt),
+        "up": L.init_swiglu(ks[3], d, d_ff, dt),
+    }
+
+
+def _slstm_cell(Wx, r_gates, h_prev, c_prev, n_prev, m_prev, nh, dh):
+    """One sLSTM step.  Wx: (B, 4, nh, dh) input pre-activations (+bias)."""
+    B = Wx.shape[0]
+    hp = h_prev.reshape(B, nh, dh)
+    rec = jnp.einsum("ghde,bhd->gbhe", r_gates.astype(F32), hp)
+    pre = Wx.transpose(1, 0, 2, 3) + rec                  # (4,B,nh,dh)
+    zt = jnp.tanh(pre[0])
+    it = pre[1]                                           # log-space gates
+    lf = jax.nn.log_sigmoid(pre[2])
+    ot = jax.nn.sigmoid(pre[3])
+    m_new = jnp.maximum(lf + m_prev, it)
+    i_ = jnp.exp(it - m_new)
+    f_ = jnp.exp(lf + m_prev - m_new)
+    c = f_ * c_prev + i_ * zt
+    n = jnp.maximum(f_ * n_prev + i_, 1e-6)
+    h = ot * c / n
+    return h.reshape(B, nh * dh), c, n, m_new
+
+
+def _slstm_gate_inputs(p, cfg, xn, conv):
+    """Project the (raw, conv) streams into the 4 gate pre-activations."""
+    d = cfg.d_model
+    wg = p["w_gates"].reshape(d, 4, d)
+    Wz = xn @ wg[:, 0]
+    Wi = conv @ wg[:, 1]
+    Wf = conv @ wg[:, 2]
+    Wo = xn @ wg[:, 3]
+    Wx = jnp.stack([Wz, Wi, Wf, Wo], axis=-2).astype(F32)  # (..., 4, d)
+    return Wx + p["b_gates"].reshape(4, d)
+
+
+def slstm_block_fwd(p: dict, cfg: ModelConfig, x, *, return_state=False):
+    d = cfg.d_model
+    nh, dh = cfg.n_heads, cfg.d_model // cfg.n_heads
+    B, S, _ = x.shape
+    xn = L.rmsnorm(p["norm"], x, cfg.norm_eps)
+    conv = jax.nn.silu(
+        causal_conv(xn, p["conv_w"], p["conv_b"]).astype(F32)).astype(x.dtype)
+    Wx = _slstm_gate_inputs(p, cfg, xn, conv)             # (B,S,4,d)
+    Wx = Wx.reshape(B, S, 4, nh, dh)
+
+    h0 = jnp.zeros((B, d), F32)
+    c0 = jnp.zeros((B, nh, dh), F32)
+    n0 = jnp.full((B, nh, dh), 1e-6, F32)
+    m0 = jnp.zeros((B, nh, dh), F32)
+
+    def step(carry, wx):
+        h, c, n, m = carry
+        h, c, n, m = _slstm_cell(wx, p["r_gates"], h, c, n, m, nh, dh)
+        return (h, c, n, m), h
+
+    (h, c, n, m), hs = jax.lax.scan(step, (h0, c0, n0, m0), Wx.swapaxes(0, 1))
+    hs = hs.swapaxes(0, 1).astype(x.dtype)                # (B,S,d)
+    hs = L.rmsnorm(p["gn"], hs.reshape(B, S, nh, dh),
+                   cfg.norm_eps).reshape(B, S, d)
+    out = x + L.swiglu(p["up"], hs)
+    if return_state:
+        return out, {"h": h, "c": c, "n": n, "m": m,
+                     "conv_win": xn[:, -(cfg.xlstm.d_conv - 1):]}
+    return out
+
+
+def slstm_block_decode(p: dict, cfg: ModelConfig, x, cache: dict):
+    d = cfg.d_model
+    nh, dh = cfg.n_heads, d // cfg.n_heads
+    B = x.shape[0]
+    xn = L.rmsnorm(p["norm"], x, cfg.norm_eps)[:, 0]      # (B, d)
+    win = jnp.concatenate([cache["conv_win"].astype(x.dtype), xn[:, None]], 1)
+    conv = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", win.astype(F32), p["conv_w"].astype(F32))
+        + p["conv_b"].astype(F32)).astype(x.dtype)
+    Wx = _slstm_gate_inputs(p, cfg, xn, conv)             # (B,4,d)
+    Wx = Wx.reshape(B, 4, nh, dh)
+    h, c, n, m = _slstm_cell(Wx, p["r_gates"], cache["h"].astype(F32),
+                             cache["c"].astype(F32), cache["n"].astype(F32),
+                             cache["m"].astype(F32), nh, dh)
+    hs = L.rmsnorm(p["gn"], h.astype(x.dtype).reshape(B, 1, nh, dh),
+                   cfg.norm_eps).reshape(B, 1, d)
+    out = x + L.swiglu(p["up"], hs)
+    return out, {"h": h, "c": c, "n": n, "m": m, "conv_win": win[:, 1:]}

@@ -1,0 +1,7 @@
+"""Cloud-native orchestration layer (KubeEdge/Sedna analogue, DESIGN.md
+§2): node registry, application deployer, lossy space-ground message
+bus, offline-autonomy metadata store."""
+from repro.orchestration.registry import NodeSpec, Registry      # noqa
+from repro.orchestration.bus import MessageBus, Message          # noqa
+from repro.orchestration.deployer import AppManifest, Deployer   # noqa
+from repro.orchestration.autonomy import MetadataStore           # noqa

@@ -1,0 +1,58 @@
+"""Request batching for the two-tier serving deployment.
+
+Fixed-slot batcher: requests queue up, get padded to a common prompt
+length and dispatched as one batch — the onboard tier favors small
+batches (latency/power bound), the ground tier large ones (throughput).
+"""
+from __future__ import annotations
+
+import collections
+import itertools
+from dataclasses import dataclass, field
+from typing import Deque, List, Optional
+
+import numpy as np
+
+_ids = itertools.count()
+
+
+@dataclass
+class Request:
+    prompt: np.ndarray                    # (S,) int32
+    max_new: int = 16
+    rid: int = field(default_factory=lambda: next(_ids))
+    arrival_t: float = 0.0
+
+
+@dataclass
+class Batch:
+    requests: List[Request]
+    tokens: np.ndarray                    # (B, S_max) left-padded
+    lengths: np.ndarray                   # (B,)
+
+
+class RequestQueue:
+    def __init__(self, max_batch: int = 8, pad_id: int = 0):
+        self.max_batch = max_batch
+        self.pad_id = pad_id
+        self._q: Deque[Request] = collections.deque()
+
+    def submit(self, req: Request) -> int:
+        self._q.append(req)
+        return req.rid
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def next_batch(self) -> Optional[Batch]:
+        if not self._q:
+            return None
+        reqs = [self._q.popleft()
+                for _ in range(min(self.max_batch, len(self._q)))]
+        S = max(len(r.prompt) for r in reqs)
+        toks = np.full((len(reqs), S), self.pad_id, np.int32)
+        lens = np.empty((len(reqs),), np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, S - len(r.prompt):] = r.prompt   # left padding
+            lens[i] = len(r.prompt)
+        return Batch(requests=reqs, tokens=toks, lengths=lens)

@@ -1,0 +1,93 @@
+"""Serving engine: prefill + KV-cache decode for any assigned arch.
+
+A fixed-slot batched engine (the satellite tier serves small batches;
+the ground tier large ones).  ``generate`` runs prompt prefill once,
+grafts the prefix cache into a full-length cache, then steps the
+jit-compiled ``decode_step``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.models import transformer as T
+
+
+def _graft(template: jax.Array, got: jax.Array) -> jax.Array:
+    """Insert ``got`` into zeroed ``template`` along the (single) axis
+    where their shapes differ (the cache sequence axis)."""
+    if template.shape == got.shape:
+        return got.astype(template.dtype)
+    diff = [i for i, (a, b) in enumerate(zip(template.shape, got.shape))
+            if a != b]
+    assert len(diff) == 1, (template.shape, got.shape)
+    return jax.lax.dynamic_update_slice_in_dim(
+        template, got.astype(template.dtype), 0, axis=diff[0])
+
+
+@dataclass
+class GenerateResult:
+    tokens: np.ndarray                 # (B, n_new)
+    logits_last: np.ndarray            # (B, V) final-step logits
+    prompt_logits: np.ndarray          # (B, V) last prompt-position logits
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, *, max_seq: int = 2048):
+        self.cfg = cfg
+        self.params = params
+        self.max_seq = max_seq
+        self._prefill = jax.jit(
+            lambda p, b: T.prefill(p, cfg, b))
+        self._decode = jax.jit(
+            lambda p, c, t, pos: T.decode_step(p, cfg, c, t, pos))
+
+    @classmethod
+    def init(cls, cfg: ModelConfig, seed: int = 0, max_seq: int = 2048):
+        params = T.init_params(jax.random.PRNGKey(seed), cfg,
+                               max_seq=max_seq)
+        return cls(cfg, params, max_seq=max_seq)
+
+    def full_cache(self, prompt_cache, batch: int):
+        template = T.init_cache(self.cfg, batch, self.max_seq)
+        return jax.tree.map(_graft, template, prompt_cache)
+
+    def generate(self, tokens: np.ndarray, *, max_new: int = 16,
+                 greedy: bool = True, extra_inputs: Optional[dict] = None,
+                 seed: int = 0) -> GenerateResult:
+        """tokens: (B, S_prompt) int32."""
+        cfg = self.cfg
+        B, S = tokens.shape
+        batch = {"tokens": jnp.asarray(tokens, jnp.int32)}
+        if extra_inputs:
+            batch.update({k: jnp.asarray(v) for k, v in extra_inputs.items()})
+        logits, cache = self._prefill(self.params, batch)
+        cache = self.full_cache(cache, B)
+        prompt_logits = np.asarray(logits[:, -1], np.float32)
+
+        key = jax.random.PRNGKey(seed)
+        pos = S
+        if cfg.family == "vlm":
+            pos = S + (extra_inputs or {}).get(
+                "patch_embeds", np.zeros((B, 0, 1))).shape[1]
+        out = np.empty((B, max_new), np.int64)
+        cur_logits = logits[:, -1]
+        for t in range(max_new):
+            if greedy:
+                nxt = jnp.argmax(cur_logits, axis=-1)
+            else:
+                key, sk = jax.random.split(key)
+                nxt = jax.random.categorical(sk, cur_logits)
+            out[:, t] = np.asarray(nxt)
+            step_logits, cache = self._decode(
+                self.params, cache, nxt[:, None].astype(jnp.int32),
+                jnp.int32(pos + t))
+            cur_logits = step_logits[:, 0]
+        return GenerateResult(tokens=out,
+                              logits_last=np.asarray(cur_logits, np.float32),
+                              prompt_logits=prompt_logits)

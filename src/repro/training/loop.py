@@ -1,0 +1,60 @@
+"""Single-host training loop used by examples and tests (the multi-pod
+path goes through launch/train.py with pjit)."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.models import transformer as T
+from repro.training import optim
+
+
+@dataclass
+class TrainState:
+    params: dict
+    opt_state: dict
+    step: int = 0
+    history: list = field(default_factory=list)
+
+
+def init_state(cfg: ModelConfig, opt_cfg: optim.OptimConfig, *,
+               seed: int = 0, max_seq: int = 4096) -> TrainState:
+    params = T.init_params(jax.random.PRNGKey(seed), cfg, max_seq=max_seq)
+    return TrainState(params=params,
+                      opt_state=optim.adamw_init(params, opt_cfg))
+
+
+def train(cfg: ModelConfig, state: TrainState, data: Iterable[dict],
+          opt_cfg: optim.OptimConfig, *, steps: int,
+          log_every: int = 20,
+          callback: Optional[Callable] = None) -> TrainState:
+    @jax.jit
+    def step_fn(params, opt_state, batch):
+        def lf(p):
+            return T.loss_fn(p, cfg, batch)
+        (_, metrics), grads = jax.value_and_grad(lf, has_aux=True)(params)
+        params, opt_state, om = optim.adamw_update(params, grads, opt_state,
+                                                   opt_cfg)
+        return params, opt_state, {**metrics, **om}
+
+    it = iter(data)
+    t0 = time.time()
+    for _ in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+        state.params, state.opt_state, m = step_fn(
+            state.params, state.opt_state, batch)
+        state.step += 1
+        if state.step % log_every == 0 or state.step == 1:
+            row = {k: float(v) for k, v in m.items()}
+            row["step"] = state.step
+            row["wall_s"] = round(time.time() - t0, 2)
+            state.history.append(row)
+            if callback:
+                callback(row)
+    return state

@@ -1,0 +1,14 @@
+import os
+
+# tests must see ONE device (the dry-run, and only the dry-run, forces 512)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import pytest
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

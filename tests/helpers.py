@@ -1,0 +1,25 @@
+"""Shared test helpers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig, get_reduced_config
+
+
+def f32_cfg(arch: str) -> ModelConfig:
+    """Reduced config in fp32 for tight numerical comparisons."""
+    return get_reduced_config(arch).with_(param_dtype="float32",
+                                          activation_dtype="float32")
+
+
+def make_batch(cfg: ModelConfig, B: int, S: int, seed: int = 0) -> dict:
+    key = jax.random.PRNGKey(seed)
+    batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+    act = jnp.dtype(cfg.activation_dtype)
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = 0.02 * jax.random.normal(
+            key, (B, cfg.n_patches, cfg.d_model), act)
+    if cfg.family == "audio":
+        batch["audio_frames"] = 0.02 * jax.random.normal(
+            key, (B, cfg.n_audio_frames, cfg.d_model), act)
+    return batch

@@ -1,0 +1,82 @@
+"""Per-architecture smoke tests: a REDUCED variant of each assigned
+family runs one forward/train step and one decode step on CPU, asserting
+output shapes and finiteness (assignment requirement f)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.config import ARCH_IDS, INPUT_SHAPES, get_config, get_reduced_config, supports_shape
+from repro.models import transformer as T
+from repro.training import optim
+from repro.training.loop import init_state, train
+
+from helpers import make_batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_and_loss(arch):
+    cfg = get_reduced_config(arch)
+    B, S = 2, 64
+    params = T.init_params(jax.random.PRNGKey(0), cfg, max_seq=S)
+    batch = make_batch(cfg, B, S)
+    logits, aux = T.forward(params, cfg, batch)
+    S_total = S + (cfg.n_patches if cfg.family == "vlm" else 0)
+    assert logits.shape == (B, S_total, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    loss, metrics = T.loss_fn(params, cfg, batch)
+    assert jnp.isfinite(loss)
+    assert float(loss) > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step(arch):
+    cfg = get_reduced_config(arch)
+    B, S = 2, 32
+    opt_cfg = optim.OptimConfig(lr=1e-3, warmup_steps=1, total_steps=4)
+    params = T.init_params(jax.random.PRNGKey(0), cfg, max_seq=S)
+    state = optim.adamw_init(params, opt_cfg)
+    batch = make_batch(cfg, B, S)
+
+    def lf(p):
+        return T.loss_fn(p, cfg, batch)
+
+    (_, m0), grads = jax.value_and_grad(lf, has_aux=True)(params)
+    params2, state, om = optim.adamw_update(params, grads, state, opt_cfg)
+    assert jnp.isfinite(om["grad_norm"]) and float(om["grad_norm"]) > 0
+    # params actually moved
+    moved = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(
+        a.astype(jnp.float32) - b.astype(jnp.float32)))), params, params2)
+    assert max(jax.tree.leaves(moved)) > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_step(arch):
+    cfg = get_reduced_config(arch)
+    B, S_max = 2, 64
+    params = T.init_params(jax.random.PRNGKey(0), cfg, max_seq=S_max)
+    cache = T.init_cache(cfg, B, S_max)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    logits, cache2 = T.decode_step(params, cfg, cache, tok, jnp.int32(0))
+    assert logits.shape == (B, 1, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    # cache structure preserved
+    assert jax.tree.structure(cache) == jax.tree.structure(cache2)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_constructs(arch):
+    """Full configs are exercised via the dry-run only; here we check the
+    exact assigned numbers are loadable and countable."""
+    cfg = get_config(arch)
+    n = cfg.param_count()
+    assert n > 1e7
+    for shape in INPUT_SHAPES.values():
+        supports_shape(cfg, shape)   # must not raise
+
+
+def test_reduced_configs_are_reduced():
+    for arch in ARCH_IDS:
+        r = get_reduced_config(arch)
+        assert r.n_layers <= 2 and r.d_model <= 512
+        if r.moe:
+            assert r.moe.n_experts <= 4

@@ -1,0 +1,93 @@
+"""Per-kernel shape/dtype sweeps: every Pallas kernel (interpret=True on
+CPU) against its pure-jnp oracle in kernels/ref.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(42)
+
+
+def _tol(dtype):
+    return dict(atol=5e-2, rtol=5e-2) if dtype == jnp.bfloat16 else \
+        dict(atol=2e-4, rtol=2e-4)
+
+
+@pytest.mark.parametrize("B,S,H,Hkv,D", [
+    (2, 256, 4, 2, 64),
+    (1, 512, 2, 1, 128),
+    (2, 256, 8, 8, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 128), (False, 0)])
+def test_flash_attention_kernel(B, S, H, Hkv, D, dtype, causal, window):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, S, Hkv, D), dtype)
+    v = jax.random.normal(ks[2], (B, S, Hkv, D), dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              block_q=128, block_k=128)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(out.astype(jnp.float32),
+                               want.astype(jnp.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("B,S,H,Hkv,D", [(2, 512, 8, 2, 64), (1, 256, 4, 1, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("kv_len", [1, 100, 512])
+def test_decode_attention_kernel(B, S, H, Hkv, D, dtype, kv_len):
+    if kv_len > S:
+        pytest.skip("kv_len beyond cache")
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, S, Hkv, D), dtype)
+    v = jax.random.normal(ks[2], (B, S, Hkv, D), dtype)
+    out = ops.decode_attention(q, k, v, jnp.int32(kv_len), block_k=128)
+    want = ref.decode_attention_ref(q, k, v, jnp.int32(kv_len))
+    np.testing.assert_allclose(out.astype(jnp.float32),
+                               want.astype(jnp.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("B,S,H,P,N,chunk", [
+    (2, 256, 2, 32, 16, 64),
+    (1, 512, 3, 64, 64, 128),
+    (2, 128, 1, 16, 8, 128),   # chunk == S
+])
+def test_ssm_scan_kernel(B, S, H, P, N, chunk):
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.uniform(ks[2], (H,), minval=0.0, maxval=1.0))
+    Bm = jax.random.normal(ks[3], (B, S, H, N))
+    Cm = jax.random.normal(ks[4], (B, S, H, N))
+    y, h = ops.ssm_chunk_scan(x, dt, A, Bm, Cm, chunk=chunk)
+    y_ref, h_ref = ref.ssm_sequential_ref(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(y, y_ref, atol=2e-3, rtol=2e-3)
+    np.testing.assert_allclose(h, h_ref, atol=2e-3, rtol=2e-3)
+
+
+@pytest.mark.parametrize("B,V", [(8, 1000), (16, 4096), (4, 50257)])
+@pytest.mark.parametrize("scale", [1.0, 8.0])
+def test_conf_gate_kernel(B, V, scale):
+    logits = jax.random.normal(KEY, (B, V)) * scale
+    got = ops.confidence_gate(logits, block_b=4, block_v=1024)
+    want = ref.confidence_gate_ref(logits)
+    for k in ("max_prob", "entropy", "margin"):
+        np.testing.assert_allclose(got[k], want[k], atol=2e-4, rtol=1e-3)
+    assert bool(jnp.all(got["argmax"] == want["argmax"]))
+
+
+@pytest.mark.parametrize("N,D", [(256, 128), (512, 384), (128, 2048)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_int8_quant_kernel(N, D, dtype):
+    x = jax.random.normal(KEY, (N, D), dtype) * 3.0
+    q, s = ops.int8_quantize(x, block_rows=128)
+    qr, sr = ref.int8_quantize_ref(x)
+    np.testing.assert_allclose(s, sr, rtol=1e-5)
+    assert int(jnp.max(jnp.abs(q.astype(jnp.int32) - qr.astype(jnp.int32)))) <= 1
+    # reconstruction error bounded by scale/2 (+1 ulp grace)
+    rec = ref.int8_dequantize_ref(q, s)
+    err = jnp.max(jnp.abs(rec - x.astype(jnp.float32)))
+    assert float(err) <= float(jnp.max(s)) * 1.51

@@ -1,0 +1,70 @@
+"""The paper's technique on framework-native LM tiers: the
+configs/tiansuan_pair onboard/ground transformers in a collaborative
+next-token-prediction cascade (DESIGN.md §2 — the YOLO pair becomes a
+(reduced, full) LM pair; the gating math is unchanged)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import tiansuan_pair as TP
+from repro.core.cascade import CascadeConfig, CollaborativeEngine
+from repro.core.gating import ConfidenceGate, calibrate_threshold
+from repro.data.tokens import TokenStream, TokenStreamConfig
+from repro.models import transformer as T
+from repro.training import optim
+from repro.training.loop import init_state, train
+
+
+@pytest.fixture(scope="module")
+def lm_tiers():
+    stream = TokenStream(TokenStreamConfig(vocab_size=TP.ONBOARD.vocab_size,
+                                           seq_len=96, batch_size=8))
+    tiers = {}
+    for name, cfg, steps in (("onboard", TP.ONBOARD, 30),
+                             ("ground", TP.GROUND, 90)):
+        opt = optim.OptimConfig(lr=2e-3, warmup_steps=5, total_steps=steps)
+        st = init_state(cfg, opt, max_seq=96)
+        st = train(cfg, st, iter(stream), opt, steps=steps, log_every=steps)
+        tiers[name] = (cfg, st.params, st.history[-1]["loss"])
+    return tiers, stream
+
+
+def test_ground_tier_is_stronger(lm_tiers):
+    tiers, _ = lm_tiers
+    assert tiers["ground"][2] < tiers["onboard"][2]
+
+
+def test_lm_collaborative_cascade(lm_tiers):
+    tiers, stream = lm_tiers
+    ocfg, oparams, _ = tiers["onboard"]
+    gcfg, gparams, _ = tiers["ground"]
+
+    eval_batch = stream.batch(10_000)["tokens"]        # held-out
+    prefix, target = eval_batch[:, :-1], eval_batch[:, -1]
+
+    def tier_fn(cfg, params):
+        def fn(toks):
+            logits, _ = T.forward(params, cfg,
+                                  {"tokens": jnp.asarray(toks)}, remat=False)
+            return np.asarray(logits[:, -1], np.float32)
+        return fn
+
+    onboard_fn = tier_fn(ocfg, oparams)
+    ground_fn = tier_fn(gcfg, gparams)
+    conf = np.asarray(ConfidenceGate("max_prob", 1.1).decide(
+        jnp.asarray(onboard_fn(prefix)))["confidence"])
+    thr = calibrate_threshold(conf, np.ones_like(conf, bool), 0.6)
+
+    eng = CollaborativeEngine(onboard_fn, ground_fn, CascadeConfig(
+        gate=ConfidenceGate("max_prob", thr), item_dtype_bytes=4))
+    collab = eng.run(prefix, item_shape=prefix.shape[1:])
+    onboard_only = eng.run(prefix, item_shape=prefix.shape[1:],
+                           ground_available=False)
+
+    acc_c = float(np.mean(collab.predictions == target))
+    acc_o = float(np.mean(onboard_only.predictions == target))
+    assert acc_c >= acc_o                     # ground dominates escalations
+    s = collab.ledger.summary()
+    assert s["bytes_downlinked"] < s["bytes_bentpipe_baseline"]
+    assert 0.0 < s["escalation_rate"] <= 0.7 + 1.0 / len(conf)

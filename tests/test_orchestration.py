@@ -1,0 +1,90 @@
+"""Cloud-native orchestration layer: registry liveness, contact-gated
+message delivery, deployment + offline-autonomy restore."""
+import numpy as np
+import pytest
+
+from repro.core.link import ContactSchedule, LinkModel
+from repro.orchestration import (AppManifest, Deployer, Message, MessageBus,
+                                 MetadataStore, NodeSpec, Registry)
+
+
+@pytest.fixture
+def cluster():
+    reg = Registry()
+    reg.register(NodeSpec("baoyun", "satellite",
+                          contacts=ContactSchedule(seed=3)))
+    reg.register(NodeSpec("ground-0", "ground"))
+    return reg
+
+
+def test_registry_reachability_follows_contacts(cluster):
+    sat = cluster.get("baoyun")
+    wins = sat.contacts.windows(86_400.0)
+    inside = 0.5 * (wins[0][0] + wins[0][1])
+    outside = wins[0][1] + 30.0
+    assert cluster.reachable("baoyun", inside)
+    assert not cluster.reachable("baoyun", outside)
+    assert cluster.reachable("ground-0", outside)
+
+
+def test_bus_delivers_only_in_contact_windows(cluster):
+    bus = MessageBus(cluster)
+    got = []
+    bus.subscribe("ground-0", "results", lambda m: got.append(m))
+    sat = cluster.get("baoyun")
+    win = sat.contacts.windows(86_400.0)[0]
+    # send long before the window: must arrive at/after window start
+    dt = bus.send("baoyun", "ground-0", "results", {"x": 1},
+                  nbytes=10_000, t=0.0)
+    assert dt is not None and dt >= win[0]
+    bus.advance(win[0] - 1.0)
+    assert not got
+    bus.advance(dt + 1e-6)
+    assert len(got) == 1 and got[0].payload == {"x": 1}
+
+
+def test_bus_ground_to_ground_instant(cluster):
+    cluster.register(NodeSpec("cloud", "ground"))
+    bus = MessageBus(cluster)
+    got = []
+    bus.subscribe("cloud", "sync", lambda m: got.append(m))
+    dt = bus.send("ground-0", "cloud", "sync", b"tick", nbytes=64, t=5.0)
+    assert dt == 5.0
+    bus.advance(5.0)
+    assert got
+
+
+def test_large_transfer_spills_to_next_window(cluster):
+    bus = MessageBus(cluster)
+    sat = cluster.get("baoyun")
+    w0, w1 = sat.contacts.windows(86_400.0)[:2]
+    # a transfer bigger than one window's capacity at 40 Mbps
+    window_cap = (w0[1] - w0[0]) * 40e6 / 8 * 0.95
+    dt = bus.send("baoyun", "ground-0", "bulk", None,
+                  nbytes=int(window_cap * 2), t=w0[0])
+    assert dt is not None and dt >= w1[0]
+
+
+def test_deployer_and_offline_restore(tmp_path, cluster):
+    store = MetadataStore(str(tmp_path / "meta.json"))
+    dep = Deployer(cluster, store)
+    made = []
+    manifest = AppManifest("onboard-infer", "baoyun",
+                           factory=lambda: made.append(1) or "worker-1")
+    dep.apply(manifest)
+    assert dep.worker("onboard-infer") == "worker-1"
+    assert store.actual("onboard-infer") == "running"
+
+    # simulate satellite restart: new deployer, same metadata file
+    store2 = MetadataStore(str(tmp_path / "meta.json"))
+    store2.record_actual("onboard-infer", "dead")
+    dep2 = Deployer(cluster, store2)
+    n = dep2.restore({"onboard-infer": lambda: "worker-2"})
+    assert n == 1
+    assert dep2.worker("onboard-infer") == "worker-2"
+
+
+def test_deployer_rejects_unknown_node(cluster):
+    dep = Deployer(cluster)
+    with pytest.raises(KeyError):
+        dep.apply(AppManifest("x", "nonexistent", factory=lambda: None))

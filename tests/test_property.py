@@ -1,0 +1,168 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.filtering import CloudFilterConfig, filter_tiles
+from repro.core.gating import ConfidenceGate, accuracy_with_gate, calibrate_threshold
+from repro.core.link import ContactSchedule, LinkModel
+from repro.core.tiling import merge_tiles, split_frame
+from repro.core.telemetry import Ledger
+from repro.kernels import ref
+
+SETTINGS = dict(max_examples=30, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# gating
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 40), st.integers(2, 30),
+       st.floats(0.0, 1.0), st.floats(0.0, 1.0))
+@settings(**SETTINGS)
+def test_gate_threshold_monotone(B, V, t_lo, t_hi):
+    """A higher threshold never escalates fewer items."""
+    t_lo, t_hi = min(t_lo, t_hi), max(t_lo, t_hi)
+    logits = jax.random.normal(jax.random.PRNGKey(B * V), (B, V)) * 3
+    lo = ConfidenceGate("max_prob", t_lo).decide(logits)["escalate"]
+    hi = ConfidenceGate("max_prob", t_hi).decide(logits)["escalate"]
+    assert int(hi.sum()) >= int(lo.sum())
+    # escalation sets are nested
+    assert bool(jnp.all(jnp.logical_or(~lo, hi)))
+
+
+@given(st.integers(4, 200), st.floats(0.0, 1.0))
+@settings(**SETTINGS)
+def test_calibrate_threshold_respects_budget(n, budget):
+    rng = np.random.default_rng(n)
+    conf = rng.uniform(0, 1, n).astype(np.float32)
+    thr = calibrate_threshold(conf, np.ones(n, bool), budget)
+    esc_rate = float(np.mean(conf < thr))
+    assert esc_rate <= budget + 1.0 / n + 1e-9
+
+
+@given(st.integers(2, 100))
+@settings(**SETTINGS)
+def test_collaborative_accuracy_bounds(n):
+    """System accuracy is between onboard-only and ground-only accuracy
+    whenever the ground tier is no worse than the onboard tier on every
+    escalated item subset."""
+    rng = np.random.default_rng(n)
+    onboard = rng.random(n) < 0.5
+    ground = onboard | (rng.random(n) < 0.6)    # ground dominates
+    esc = rng.random(n) < 0.4
+    acc = accuracy_with_gate(onboard, ground, esc)
+    assert acc >= np.mean(onboard) - 1e-9
+    assert acc <= np.mean(ground) + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# tiling
+# ---------------------------------------------------------------------------
+
+@given(st.integers(5, 64), st.integers(5, 64), st.sampled_from([4, 8, 16]))
+@settings(**SETTINGS)
+def test_tiling_roundtrip(H, W, tile):
+    rng = np.random.default_rng(H * W)
+    frame = rng.random((H, W, 3)).astype(np.float32)
+    tiles = split_frame(jnp.asarray(frame), tile)
+    back = merge_tiles(tiles, H, W)
+    np.testing.assert_allclose(back, frame, atol=0)
+    # tile count matches the grid
+    assert tiles.shape[0] == (-(-H // tile)) * (-(-W // tile))
+
+
+# ---------------------------------------------------------------------------
+# link model
+# ---------------------------------------------------------------------------
+
+@given(st.floats(0.1, 40.0), st.integers(1, 10 ** 9))
+@settings(**SETTINGS)
+def test_link_time_positive_and_linear(mbps, nbytes):
+    link = LinkModel(downlink_mbps=mbps)
+    t1 = link.downlink_time_s(nbytes)
+    t2 = link.downlink_time_s(2 * nbytes)
+    assert t1 > 0 and np.isclose(t2, 2 * t1, rtol=1e-9)
+
+
+@given(st.integers(1, 12), st.floats(60.0, 900.0))
+@settings(**SETTINGS)
+def test_contact_windows_ordered_disjoint(contacts, dur):
+    sched = ContactSchedule(contact_duration_s=dur,
+                            contacts_per_day=contacts, seed=contacts)
+    wins = sched.windows(86_400.0)
+    assert len(wins) >= contacts - 1
+    for (a1, b1), (a2, b2) in zip(wins, wins[1:]):
+        assert a1 < b1 <= a2 < b2 or b1 <= a2   # ordered, disjoint
+    cap = sched.downlink_capacity_bytes(86_400.0)
+    assert cap > 0
+
+
+# ---------------------------------------------------------------------------
+# ledger
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 1000), st.integers(0, 1000), st.integers(64, 4096))
+@settings(**SETTINGS)
+def test_ledger_data_reduction_bounds(n, n_esc_raw, item_bytes):
+    n_esc = min(n_esc_raw, n)
+    led = Ledger()
+    led.add("items_total", n)
+    led.add("items_escalated", n_esc)
+    led.add("bytes_downlinked", 16 * (n - n_esc) + item_bytes * n_esc)
+    led.add("bytes_bentpipe_baseline", item_bytes * n)
+    s = led.summary()
+    assert 0.0 <= s["escalation_rate"] <= 1.0
+    if item_bytes > 16:
+        assert s["data_reduction"] >= 0.0
+    assert s["data_reduction"] <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# quantization
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 8), st.integers(8, 256), st.floats(0.01, 100.0))
+@settings(**SETTINGS)
+def test_int8_roundtrip_error_bound(N, D, scale):
+    x = (jax.random.normal(jax.random.PRNGKey(N * D), (N, D)) * scale)
+    q, s = ref.int8_quantize_ref(x)
+    rec = ref.int8_dequantize_ref(q, s)
+    # per-row error bounded by half a quantization step
+    step = s[:, None]
+    assert bool(jnp.all(jnp.abs(rec - x) <= 0.5 * step + 1e-6))
+
+
+# ---------------------------------------------------------------------------
+# confidence metrics
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 8), st.integers(2, 64), st.floats(0.1, 10.0))
+@settings(**SETTINGS)
+def test_confidence_metric_ranges(B, V, scale):
+    logits = jax.random.normal(jax.random.PRNGKey(B + V), (B, V)) * scale
+    m = ref.confidence_gate_ref(logits)
+    assert bool(jnp.all((m["max_prob"] > 0) & (m["max_prob"] <= 1 + 1e-6)))
+    assert bool(jnp.all((m["entropy"] >= -1e-5)
+                        & (m["entropy"] <= np.log(V) + 1e-4)))
+    assert bool(jnp.all((m["margin"] >= -1e-6) & (m["margin"] <= 1 + 1e-6)))
+    assert bool(jnp.all((m["argmax"] >= 0) & (m["argmax"] < V)))
+
+
+# ---------------------------------------------------------------------------
+# cloud filter
+# ---------------------------------------------------------------------------
+
+@given(st.integers(2, 12))
+@settings(**SETTINGS)
+def test_filter_drops_pure_cloud_keeps_texture(n):
+    rng = np.random.default_rng(n)
+    t = 16
+    bright = np.clip(0.93 + 0.002 * rng.standard_normal((n, t, t, 3)), 0, 1)
+    textured = np.clip(0.3 + 0.35 * rng.random((n, t, t, 3)), 0, 1)
+    tiles = jnp.asarray(np.concatenate([bright, textured]).astype(np.float32))
+    keep, stats = filter_tiles(tiles)
+    keep = np.asarray(keep)
+    assert not keep[:n].any()            # clouds dropped
+    assert keep[n:].sum() >= 1           # at least some texture kept

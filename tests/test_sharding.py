@@ -1,0 +1,97 @@
+"""Sharding rules: divisibility-aware logical->physical mapping and the
+per-preset parameter specs."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.config import get_config
+from repro.launch import sharding as SH
+from repro.models import pspec as PS
+
+
+@pytest.fixture
+def mesh():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def test_pspec_divisibility_fallback(mesh):
+    with PS.mesh_rules(mesh):
+        # model axis size 1 divides everything -> sharded entries appear
+        spec = PS.pspec_for((16, 15), [None, "model"])
+        assert spec == P(None, "model")
+    big = jax.sharding.AbstractMesh((1, 16), ("data", "model"))
+    with PS.mesh_rules(big):
+        # 15 heads cannot shard over model=16 -> dropped
+        spec = PS.pspec_for((4, 15), [None, "model"])
+        assert spec == P(None, None)
+        # 32 can
+        spec = PS.pspec_for((4, 32), [None, "model"])
+        assert spec == P(None, "model")
+
+
+def test_pspec_duplicate_axis_guard():
+    big = jax.sharding.AbstractMesh((2, 2), ("data", "model"))
+    with PS.mesh_rules(big, {"a": ("data", "model"), "b": ("data",)}):
+        spec = PS.pspec_for((4, 4), ["a", "b"])
+        # "b" would reuse "data" -> dropped
+        assert spec == P(("data", "model"), None)
+
+
+def test_shard_noop_without_rules():
+    PS.set_mesh_rules(None)
+    x = jax.numpy.ones((4, 4))
+    assert PS.shard(x, "batch", "model") is x
+
+
+def test_param_logical_axes_rules():
+    import jax.tree_util as jtu
+    cfg = get_config("qwen3-moe-30b-a3b")
+    from repro.launch.specs import params_specs
+    shapes = params_specs(cfg, max_seq=64)
+    flat = jtu.tree_flatten_with_path(shapes)[0]
+    by_name = {}
+    for path, leaf in flat:
+        names = SH._path_names(path)
+        by_name["/".join(names)] = (path, leaf)
+    # expert weights: (L, E, d, f) -> expert on dim 1
+    for key, (path, leaf) in by_name.items():
+        la = SH.param_logical_axes(path, leaf)
+        if key.endswith("moe/w_gate"):
+            assert la == [None, "expert", "fsdp", None]
+        if key.endswith("moe/w_down"):
+            assert la == [None, "expert", None, "fsdp"]
+        if key.endswith("attn/w_o"):
+            assert la == [None, "model", "fsdp"]
+        if key.endswith("router"):
+            assert la == [None] * leaf.ndim       # replicated
+        if key == "embed":
+            assert la == ["model", "fsdp"]
+
+
+@pytest.mark.parametrize("preset", list(SH.SHARDING_PRESETS))
+def test_presets_produce_valid_specs(preset, mesh):
+    cfg = get_config("smollm-360m")
+    from repro.launch.specs import params_specs
+    shapes = params_specs(cfg, max_seq=64)
+    specs = SH.params_pspecs(mesh, shapes, SH.SHARDING_PRESETS[preset])
+    # every leaf got a NamedSharding on the mesh
+    for s in jax.tree.leaves(specs, is_leaf=lambda x: hasattr(x, "spec")):
+        assert s.mesh.shape == mesh.shape
+
+
+def test_cache_axes_mqa_seq_sharding():
+    """granite (kv=1): cache heads cannot shard over model=16, the rule
+    falls to sequence sharding."""
+    cfg = get_config("granite-34b")
+    import jax.numpy as jnp
+    leaf = jax.ShapeDtypeStruct((88, 8, 4096, 1, 128), jnp.bfloat16)
+
+    class E:   # fake path entry
+        def __init__(self, k):
+            self.key = k
+    la = SH.cache_logical_axes(cfg, (E("blocks"), E("k")), leaf)
+    assert la == [None, "batch", "seq", None, None]
+    cfg2 = get_config("zamba2-7b")     # kv=32 -> heads shard
+    la2 = SH.cache_logical_axes(cfg2, (E("shared_attn"), E("k")), leaf)
+    assert la2 == [None, "batch", None, "model", None]
