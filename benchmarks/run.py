@@ -11,7 +11,8 @@ import sys
 import time
 
 BENCHES = ("fig6_filter_rate", "fig7_accuracy", "table1_link_budget",
-           "table23_energy", "data_reduction", "kernel_conf_gate")
+           "table23_energy", "data_reduction", "kernel_conf_gate",
+           "serving_throughput")
 
 
 def main() -> None:

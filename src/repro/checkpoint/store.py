@@ -1,8 +1,11 @@
-"""Checkpointing: msgpack + zstd over a flattened param/optimizer pytree.
+"""Checkpointing: msgpack (+ optional zstd) over a flattened pytree.
 
 No orbax in this environment; this is a self-contained, deterministic
 format.  Layout: a single ``.ckpt`` file holding
-    {"meta": {...}, "leaves": {path: {dtype, shape, raw(zstd)}}}
+    {"meta": {...}, "leaves": {path: {dtype, shape, codec, raw}}}
+Each leaf records its ``codec`` ("zstd" or "raw") so a file written on a
+host with ``zstandard`` installed loads on one without it and vice
+versa — compression is an optimization, never a format requirement.
 Loading restores into the exact tree structure via a template pytree
 (shape/dtype checked leaf by leaf).  bf16 round-trips via a uint16 view.
 """
@@ -15,7 +18,11 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard as zstd
+
+try:
+    import zstandard as zstd
+except ImportError:              # pragma: no cover - env dependent
+    zstd = None
 
 
 def _path_str(path) -> str:
@@ -33,15 +40,17 @@ def _path_str(path) -> str:
 def save_checkpoint(path: str, tree: Any, meta: Optional[dict] = None,
                     level: int = 3) -> int:
     """Returns the on-disk size in bytes."""
-    cctx = zstd.ZstdCompressor(level=level)
+    cctx = zstd.ZstdCompressor(level=level) if zstd is not None else None
     leaves = {}
     for p, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
         arr = np.asarray(leaf)
         view = arr.view(np.uint16) if arr.dtype == jnp.bfloat16 else arr
+        payload = np.ascontiguousarray(view).tobytes()
         leaves[_path_str(p)] = {
             "dtype": str(arr.dtype),
             "shape": list(arr.shape),
-            "raw": cctx.compress(np.ascontiguousarray(view).tobytes()),
+            "codec": "zstd" if cctx is not None else "raw",
+            "raw": cctx.compress(payload) if cctx is not None else payload,
         }
     blob = msgpack.packb({"meta": meta or {}, "leaves": leaves},
                          use_bin_type=True)
@@ -51,12 +60,25 @@ def save_checkpoint(path: str, tree: Any, meta: Optional[dict] = None,
     return len(blob)
 
 
+def _decode_payload(rec: dict) -> bytes:
+    # files written before codecs were recorded are always zstd
+    codec = rec.get("codec", "zstd")
+    if codec == "raw":
+        return rec["raw"]
+    if codec == "zstd":
+        if zstd is None:
+            raise RuntimeError(
+                "checkpoint leaf is zstd-compressed but the 'zstandard' "
+                "module is not installed")
+        return zstd.ZstdDecompressor().decompress(rec["raw"])
+    raise ValueError(f"unknown checkpoint codec {codec!r}")
+
+
 def load_checkpoint(path: str, template: Any):
     """Restore into the structure of ``template`` (a pytree of arrays or
     ShapeDtypeStructs).  Returns (tree, meta)."""
     with open(path, "rb") as f:
         obj = msgpack.unpackb(f.read(), raw=False)
-    dctx = zstd.ZstdDecompressor()
     leaves_in = obj["leaves"]
 
     paths, treedef = jax.tree_util.tree_flatten_with_path(template)
@@ -69,7 +91,7 @@ def load_checkpoint(path: str, template: Any):
         want_shape = tuple(leaf.shape)
         if tuple(rec["shape"]) != want_shape:
             raise ValueError(f"{key}: shape {rec['shape']} != {want_shape}")
-        raw = dctx.decompress(rec["raw"])
+        raw = _decode_payload(rec)
         if rec["dtype"] == "bfloat16":
             arr = np.frombuffer(raw, np.uint16).reshape(want_shape)
             arr = jnp.asarray(arr).view(jnp.bfloat16)

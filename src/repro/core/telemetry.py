@@ -28,6 +28,7 @@ class Ledger:
             out["data_reduction"] = 1.0 - self.get("bytes_downlinked") / raw
         esc = self.get("items_escalated")
         tot = self.get("items_total")
-        if tot:
-            out["escalation_rate"] = esc / tot
+        if "items_total" in self.counters:
+            # an empty batch escalates nothing, not NaN of something
+            out["escalation_rate"] = esc / tot if tot else 0.0
         return out

@@ -27,6 +27,7 @@ NEG_INF = -1e30
 
 def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s, *,
             block_k: int, n_kv: int, g: int, scale: float):
+    b = pl.program_id(0)
     j = pl.program_id(2)
 
     @pl.when(j == 0)
@@ -41,7 +42,7 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s, *,
     v = v_ref[0, :, 0, :].astype(F32)
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (g, bk)
 
-    kv_len = len_ref[0]
+    kv_len = len_ref[b]
     kpos = j * block_k + jax.lax.broadcasted_iota(jnp.int32, (g, block_k), 1)
     s = jnp.where(kpos < kv_len, s, NEG_INF)
 
@@ -64,8 +65,9 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s, *,
 @functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
 def decode_attention_kernel(q, k, v, kv_len, *, block_k: int = 512,
                             interpret: bool = False):
-    """q: (B, H, D); k, v: (B, S, Hkv, D); kv_len: () int32 valid length.
-    Returns (B, H, D)."""
+    """q: (B, H, D); k, v: (B, S, Hkv, D); kv_len: () int32 valid length,
+    or (B,) int32 per-sequence valid lengths (continuous batching: every
+    slot decodes against its own ragged prefix).  Returns (B, H, D)."""
     B, H, D = q.shape
     S, Hkv = k.shape[1], k.shape[2]
     g = H // Hkv
@@ -77,7 +79,8 @@ def decode_attention_kernel(q, k, v, kv_len, *, block_k: int = 512,
     kernel = functools.partial(_kernel, block_k=block_k, n_kv=n_kv, g=g,
                                scale=D ** -0.5)
     qg = q.reshape(B, Hkv, g * D)
-    kv_len_arr = jnp.asarray(kv_len, jnp.int32).reshape(1)
+    kv_len_arr = jnp.broadcast_to(
+        jnp.asarray(kv_len, jnp.int32).reshape(-1), (B,))
 
     out = pl.pallas_call(
         kernel,

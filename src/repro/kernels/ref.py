@@ -30,14 +30,16 @@ def flash_attention_ref(q, k, v, *, causal=True, window=0):
 
 
 def decode_attention_ref(q, k, v, kv_len):
-    """q: (B,H,D); k,v: (B,S,Hkv,D); kv_len: scalar valid length."""
+    """q: (B,H,D); k,v: (B,S,Hkv,D); kv_len: scalar valid length or (B,)
+    per-sequence valid lengths."""
     B, H, D = q.shape
     S, Hkv = k.shape[1], k.shape[2]
     g = H // Hkv
     qg = q.reshape(B, Hkv, g, D).astype(F32) * D ** -0.5
     s = jnp.einsum("bhgd,bkhd->bhgk", qg, k.astype(F32))
-    mask = jnp.arange(S) < kv_len
-    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    kl = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32).reshape(-1), (B,))
+    mask = jnp.arange(S)[None, :] < kl[:, None]          # (B, S)
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgk,bkhd->bhgd", p, v.astype(F32))
     return o.reshape(B, H, v.shape[-1]).astype(q.dtype)

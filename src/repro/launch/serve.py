@@ -23,6 +23,9 @@ def main():
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--dry-run", action="store_true")
     ap.add_argument("--shape", default="decode_32k")
+    ap.add_argument("--continuous", action="store_true",
+                    help="serve through the continuous-batching engine "
+                         "(batch = number of requests, slots = --batch)")
     args = ap.parse_args()
 
     if args.dry_run:
@@ -35,8 +38,23 @@ def main():
 
     cfg = (get_reduced_config(args.arch) if args.reduced
            else get_config(args.arch))
-    eng = ServingEngine.init(cfg, max_seq=args.max_seq)
     rng = np.random.default_rng(0)
+    if args.continuous:
+        from repro.serving.batching import Request
+        from repro.serving.engine import ContinuousEngine
+        eng = ContinuousEngine.init(cfg, n_slots=args.batch,
+                                    max_seq=args.max_seq)
+        reqs = [Request(prompt=rng.integers(
+                    0, cfg.vocab_size, args.prompt_len).astype(np.int32),
+                        max_new=args.max_new, arrival_t=float(i))
+                for i in range(2 * args.batch)]
+        results = eng.run(reqs)
+        print("generated tokens (continuous, finish order "
+              f"{eng.finish_order}):")
+        for rid in sorted(results):
+            print(f"  rid={rid}", results[rid].tokens.tolist())
+        return
+    eng = ServingEngine.init(cfg, max_seq=args.max_seq)
     prompts = rng.integers(0, cfg.vocab_size,
                            size=(args.batch, args.prompt_len)).astype(np.int32)
     extra = {}

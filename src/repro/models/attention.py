@@ -117,7 +117,9 @@ def chunked_attention(q, k, v, *, causal: bool, q_offset=0,
 
     q_offset: absolute position of q[0] (prefill continuation / decode).
     window: sliding-window size (0 = full).
-    kv_len: optional dynamic number of valid kv positions (decode).
+    kv_len: optional dynamic number of valid kv positions (decode);
+        scalar, or (B,) for per-sequence lengths (continuous batching
+        steps slots whose sequences are at different positions).
     """
     B, Sq, H, D = q.shape
     Skv, Hkv = k.shape[1], k.shape[2]
@@ -134,9 +136,15 @@ def chunked_attention(q, k, v, *, causal: bool, q_offset=0,
             mask &= qpos[:, None] >= kv_pos[None, :]
         if window:
             mask &= (qpos[:, None] - kv_pos[None, :]) < window
+        mask = mask[None, None, None]                 # (1,1,1,bq,Skv)
         if kv_len is not None:
-            mask &= kv_pos[None, :] < kv_len
-        s = jnp.where(mask[None, None, None], s, NEG_INF)
+            kl = jnp.asarray(kv_len)
+            if kl.ndim == 0:
+                mask = mask & (kv_pos < kl)
+            else:                                     # (B,) ragged lengths
+                mask = mask & (kv_pos[None, :] < kl[:, None]
+                               )[:, None, None, None]
+        s = jnp.where(mask, s, NEG_INF)
         p = jax.nn.softmax(s, axis=-1)
         o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
         return o.astype(q.dtype)
@@ -236,15 +244,22 @@ def attention_decode(p: dict, cfg: ModelConfig, x, cache_k, cache_v,
                      rope_pos=None):
     """x: (B, 1, d).  cache_k/v: (B, S_cache, Hkv, D) where S_cache is
     ``window`` for sliding-window archs (ring buffer) else max_seq.
-    pos: scalar int32 — cache slot index (absolute sequence position).
+    pos: scalar int32 — cache slot index (absolute sequence position) —
+    or a (B,) vector of per-sequence positions (continuous batching:
+    each slot is at its own depth in the sequence).
     rope_pos: rotary position if it differs from the slot index (VLM:
     M-RoPE text positions restart after the patch grid)."""
     B = x.shape[0]
     hd = cfg.resolved_head_dim
+    pos = jnp.asarray(pos, jnp.int32)
+    per_slot = pos.ndim == 1
     q, k, v = _project_qkv(p, cfg, x, xkv)
     if rope:
         rp = pos if rope_pos is None else rope_pos
-        posv = jnp.full((B, 1), rp, jnp.int32)
+        if per_slot:
+            posv = jnp.reshape(rp, (B, 1))
+        else:
+            posv = jnp.full((B, 1), rp, jnp.int32)
         sections = cfg.mrope_sections if cfg.mrope else None
         if sections is not None:
             posv = jnp.broadcast_to(posv, (3, B, 1))
@@ -252,8 +267,15 @@ def attention_decode(p: dict, cfg: ModelConfig, x, cache_k, cache_v,
         k = L.apply_rope(k, posv, cfg.rope_theta, sections)
     S_cache = cache_k.shape[1]
     slot = jnp.where(window > 0, pos % S_cache, pos) if window else pos
-    cache_k = jax.lax.dynamic_update_slice(cache_k, k, (0, slot, 0, 0))
-    cache_v = jax.lax.dynamic_update_slice(cache_v, v, (0, slot, 0, 0))
+    if per_slot:
+        upd = jax.vmap(
+            lambda ck, cv, kk, vv, s: (
+                jax.lax.dynamic_update_slice(ck, kk, (s, 0, 0)),
+                jax.lax.dynamic_update_slice(cv, vv, (s, 0, 0))))
+        cache_k, cache_v = upd(cache_k, cache_v, k, v, slot)
+    else:
+        cache_k = jax.lax.dynamic_update_slice(cache_k, k, (0, slot, 0, 0))
+        cache_v = jax.lax.dynamic_update_slice(cache_v, v, (0, slot, 0, 0))
     kv_len = jnp.minimum(pos + 1, S_cache)
     # ring buffers hold an unordered window; softmax is order-invariant
     # so masking by validity is sufficient (rope already encoded order).
@@ -314,11 +336,21 @@ def mla_decode(p: dict, cfg: ModelConfig, x, cache_ckv, cache_krope, pos):
     m = cfg.mla
     B = x.shape[0]
     H = cfg.n_heads
-    q_nope, q_rope, ckv, k_rope = _mla_qkv(
-        p, cfg, x, jnp.full((B, 1), pos, jnp.int32))
+    pos = jnp.asarray(pos, jnp.int32)
+    per_slot = pos.ndim == 1                   # (B,) continuous-batching path
+    posv = (jnp.reshape(pos, (B, 1)) if per_slot
+            else jnp.full((B, 1), pos, jnp.int32))
+    q_nope, q_rope, ckv, k_rope = _mla_qkv(p, cfg, x, posv)
     # cache update
-    cache_ckv = jax.lax.dynamic_update_slice(cache_ckv, ckv, (0, pos, 0))
-    cache_krope = jax.lax.dynamic_update_slice(cache_krope, k_rope, (0, pos, 0))
+    if per_slot:
+        upd = jax.vmap(lambda c, u, s: jax.lax.dynamic_update_slice(
+            c, u, (s, 0)))
+        cache_ckv = upd(cache_ckv, ckv, pos)
+        cache_krope = upd(cache_krope, k_rope, pos)
+    else:
+        cache_ckv = jax.lax.dynamic_update_slice(cache_ckv, ckv, (0, pos, 0))
+        cache_krope = jax.lax.dynamic_update_slice(cache_krope, k_rope,
+                                                   (0, pos, 0))
     # absorb w_uk into q: (B,1,H,nope) x (lora,H,nope) -> (B,1,H,lora)
     w_uk = p["w_uk"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
     q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope.astype(jnp.float32),
@@ -330,7 +362,11 @@ def mla_decode(p: dict, cfg: ModelConfig, x, cache_ckv, cache_krope, pos):
                         cache_krope.astype(jnp.float32))
     s = (s_lat + s_rope) * scale
     kv_pos = jnp.arange(cache_ckv.shape[1])
-    s = jnp.where(kv_pos[None, None, None, :] <= pos, s, NEG_INF)
+    if per_slot:
+        valid = kv_pos[None, :] <= pos[:, None]          # (B, S)
+        s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    else:
+        s = jnp.where(kv_pos[None, None, None, :] <= pos, s, NEG_INF)
     prob = jax.nn.softmax(s, axis=-1)
     ctx = jnp.einsum("bhqk,bkr->bqhr", prob, cache_ckv.astype(jnp.float32))
     w_uv = p["w_uv"].reshape(m.kv_lora_rank, H, m.v_head_dim)

@@ -75,8 +75,16 @@ def _expert_ffn(p, xe):
 
 
 def moe_fwd(p: dict, cfg: ModelConfig, x, *, dispatch: str = "einsum",
-            group_size: int = 2048) -> Tuple[jax.Array, jax.Array]:
-    """x: (B, S, d).  Returns (y, aux_loss)."""
+            group_size: int = 2048,
+            drop_free: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d).  Returns (y, aux_loss).
+
+    drop_free: size expert capacity so NO token is ever dropped.  The
+    serving paths (prefill/decode) require this: a token dropped in one
+    phrasing of the batch but not another changes logits, breaking
+    greedy determinism and prefill+decode == full-forward equivalence.
+    Training keeps the capacity-bounded (dropping) GShard behavior for
+    throughput."""
     m = cfg.moe
     B, S, d = x.shape
     T = B * S
@@ -96,7 +104,8 @@ def moe_fwd(p: dict, cfg: ModelConfig, x, *, dispatch: str = "einsum",
     else:
         G = T
     n = T // G
-    C = _capacity(cfg, G)
+    # worst case every token routes to ONE expert: C = G slots suffice
+    C = max(4, -(-G // 4) * 4) if drop_free else _capacity(cfg, G)
     xg = x2d.reshape(n, G, d)
     eg = top_e.reshape(n, G, m.experts_per_token)
     pg = top_p.reshape(n, G, m.experts_per_token)

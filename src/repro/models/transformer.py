@@ -61,8 +61,8 @@ def _init_attn_block(key, cfg: ModelConfig, use_moe: bool,
 
 
 def _attn_block_fwd(p, cfg, x, positions, *, causal=True, window=0,
-                    mode="flash", moe_dispatch="einsum", rope=True,
-                    enc_out=None, return_kv=False, x_extra=None):
+                    mode="flash", moe_dispatch="einsum", moe_drop_free=False,
+                    rope=True, enc_out=None, return_kv=False, x_extra=None):
     """Pre-norm residual block.  Returns (x, aux, kv or None)."""
     eps = cfg.norm_eps
     if x_extra is not None:                    # zamba2 shared block: concat
@@ -92,7 +92,8 @@ def _attn_block_fwd(p, cfg, x, positions, *, causal=True, window=0,
     aux = jnp.zeros((), F32)
     h = L.norm(p["ln2"], x, eps)
     if "moe" in p:
-        y, aux = M.moe_fwd(p["moe"], cfg, h, dispatch=moe_dispatch)
+        y, aux = M.moe_fwd(p["moe"], cfg, h, dispatch=moe_dispatch,
+                           drop_free=moe_drop_free)
     elif "b_up" in p.get("mlp", {}):
         y = L.gelu_mlp(p["mlp"], h)
     else:
@@ -126,7 +127,9 @@ def _attn_block_decode(p, cfg, x, cache, pos, *, window=0, x_extra=None,
         new_cache["xk"], new_cache["xv"] = cache["xk"], cache["xv"]
     h = L.norm(p["ln2"], x, eps)
     if "moe" in p:
-        y, _ = M.moe_fwd(p["moe"], cfg, h, dispatch="einsum")
+        # decode is a serving path: never drop tokens (determinism)
+        y, _ = M.moe_fwd(p["moe"], cfg, h, dispatch="einsum",
+                         drop_free=True)
     elif "b_up" in p.get("mlp", {}):
         y = L.gelu_mlp(p["mlp"], h)
     else:
@@ -288,9 +291,15 @@ def mrope_positions(cfg: ModelConfig, B: int, n_patches: int, s_text: int,
 
 def forward(params: dict, cfg: ModelConfig, batch: dict, *,
             mode: str = "flash", moe_dispatch: str = "einsum",
-            window: int = 0, return_cache: bool = False,
-            return_hidden: bool = False, remat: bool = True):
-    """Returns (logits, aux_loss[, cache][, hidden])."""
+            moe_drop_free: bool = False, window: int = 0,
+            return_cache: bool = False, return_hidden: bool = False,
+            remat: bool = True):
+    """Returns (logits, aux_loss[, cache][, hidden]).
+
+    moe_drop_free: route MoE tokens with drop-free expert capacity —
+    REQUIRED on serving forwards (prefill, reference logits compared
+    against decode) so results are batch-composition independent; leave
+    False for training (capacity-bounded GShard throughput)."""
     window = window or cfg.sliding_window
     fam = cfg.family
     if fam == "audio":
@@ -337,7 +346,8 @@ def forward(params: dict, cfg: ModelConfig, batch: dict, *,
                 cache["blocks_dense"] = _kv_cache_entry(cfg, kvs)
         fn = lambda xc, lp: _attn_block_fwd(
             lp, cfg, xc, positions, window=window, mode=mode,
-            moe_dispatch=moe_dispatch, return_kv=return_cache)
+            moe_dispatch=moe_dispatch, moe_drop_free=moe_drop_free,
+            return_kv=return_cache)
         x, aux_total, kvs = run_stack(x, aux_total, params["blocks_moe"], fn)
         if return_cache:
             cache["blocks_moe"] = _kv_cache_entry(cfg, kvs)
@@ -632,12 +642,39 @@ def init_cache(cfg: ModelConfig, B: int, max_seq: int) -> dict:
     raise ValueError(fam)
 
 
+def graft_slot_cache(cache: dict, prefix_cache: dict, slot) -> dict:
+    """Write a single-sequence prefix cache (batch axis of size 1) into
+    slot ``slot`` of a multi-slot cache, leaf by leaf.  The batch axis of
+    each leaf is the first axis where the two shapes differ; any trailing
+    mismatch (the sequence axis, shorter in the prefix) starts at 0, so
+    stale cache beyond the prefix stays in place and must be masked by
+    the caller's per-slot lengths until overwritten."""
+    def graft(big, small):
+        start = [0] * big.ndim
+        for i, (a, b) in enumerate(zip(big.shape, small.shape)):
+            if a != b:
+                start[i] = slot
+                break
+        return jax.lax.dynamic_update_slice(
+            big, small.astype(big.dtype), tuple(start))
+    return jax.tree.map(graft, cache, prefix_cache)
+
+
 def decode_step(params: dict, cfg: ModelConfig, cache: dict,
                 tokens: jax.Array, pos) -> Tuple[jax.Array, dict]:
-    """One decode step.  tokens: (B, 1) int32; pos: scalar int32 (current
-    absolute position).  Returns (logits (B,1,V), new_cache)."""
+    """One decode step.  tokens: (B, 1) int32.  pos is either a scalar
+    int32 (all sequences at the same absolute position — the fixed-slot
+    engine) or a (B,) vector of per-sequence positions (continuous
+    batching: each cache slot is at its own depth; cache writes and
+    attention masks are resolved per slot).  Returns
+    (logits (B,1,V), new_cache)."""
     fam = cfg.family
     window = cfg.sliding_window
+    per_slot = jnp.asarray(pos).ndim == 1
+    if per_slot and fam == "audio":
+        raise NotImplementedError(
+            "per-slot decode positions unsupported for encoder-decoder "
+            "audio (learned positions are looked up with a scalar index)")
     x = L.embed(params["embed"], tokens)
     rope = fam != "audio"
     rope_pos = None
@@ -731,5 +768,6 @@ def prefill(params, cfg: ModelConfig, batch: dict, *, mode="flash",
     """Run the full prompt, returning (last-position logits, cache)."""
     logits, aux, cache = forward(params, cfg, batch, mode=mode,
                                  moe_dispatch=moe_dispatch,
+                                 moe_drop_free=True,
                                  return_cache=True, remat=False)
     return logits[:, -1:], cache

@@ -1,8 +1,15 @@
 """Request batching for the two-tier serving deployment.
 
-Fixed-slot batcher: requests queue up, get padded to a common prompt
-length and dispatched as one batch — the onboard tier favors small
-batches (latency/power bound), the ground tier large ones (throughput).
+Two admission disciplines feed the engines in ``serving.engine``:
+
+  * Fixed-slot (seed behavior): requests queue up, get padded to a
+    common prompt length and dispatched as one batch — the batch must
+    drain before the next one starts.
+  * Continuous (``ContinuousEngine``): the queue is drained one request
+    at a time into whichever KV-cache slot frees up, so arrivals join
+    mid-flight.  ``RequestQueue`` stays the single admission point; a
+    bounded ``capacity`` gives the ground tier backpressure under the
+    heavy-traffic regime instead of unbounded memory growth.
 """
 from __future__ import annotations
 
@@ -16,12 +23,16 @@ import numpy as np
 _ids = itertools.count()
 
 
+class QueueFull(RuntimeError):
+    """Raised when a bounded RequestQueue rejects a submission."""
+
+
 @dataclass
 class Request:
     prompt: np.ndarray                    # (S,) int32
     max_new: int = 16
     rid: int = field(default_factory=lambda: next(_ids))
-    arrival_t: float = 0.0
+    arrival_t: float = 0.0                # engine-clock steps
 
 
 @dataclass
@@ -32,17 +43,29 @@ class Batch:
 
 
 class RequestQueue:
-    def __init__(self, max_batch: int = 8, pad_id: int = 0):
+    def __init__(self, max_batch: int = 8, pad_id: int = 0,
+                 capacity: Optional[int] = None):
         self.max_batch = max_batch
         self.pad_id = pad_id
+        self.capacity = capacity
         self._q: Deque[Request] = collections.deque()
 
     def submit(self, req: Request) -> int:
+        if self.capacity is not None and len(self._q) >= self.capacity:
+            raise QueueFull(
+                f"queue at capacity ({self.capacity}); request {req.rid} "
+                "rejected — retry after the engine drains")
         self._q.append(req)
         return req.rid
 
     def __len__(self) -> int:
         return len(self._q)
+
+    def peek(self) -> Optional[Request]:
+        return self._q[0] if self._q else None
+
+    def pop(self) -> Request:
+        return self._q.popleft()
 
     def next_batch(self) -> Optional[Batch]:
         if not self._q:
@@ -56,3 +79,26 @@ class RequestQueue:
             toks[i, S - len(r.prompt):] = r.prompt   # left padding
             lens[i] = len(r.prompt)
         return Batch(requests=reqs, tokens=toks, lengths=lens)
+
+
+def poisson_trace(n_requests: int, *, rate: float = 0.5,
+                  prompt_lens=(4, 16), max_new=(2, 24),
+                  vocab_size: int = 256, seed: int = 0) -> List[Request]:
+    """A Poisson arrival trace with heterogeneous prompt lengths and
+    decode budgets — the workload continuous batching is built for.
+
+    rate: mean arrivals per engine decode step; inter-arrival gaps are
+    exponential.  prompt_lens / max_new: inclusive (lo, hi) ranges
+    sampled uniformly.  Returns requests sorted by arrival_t.
+    """
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    out = []
+    for _ in range(n_requests):
+        t += float(rng.exponential(1.0 / rate))
+        S = int(rng.integers(prompt_lens[0], prompt_lens[1] + 1))
+        out.append(Request(
+            prompt=rng.integers(1, vocab_size, S).astype(np.int32),
+            max_new=int(rng.integers(max_new[0], max_new[1] + 1)),
+            arrival_t=t))
+    return out

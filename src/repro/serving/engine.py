@@ -1,14 +1,23 @@
-"""Serving engine: prefill + KV-cache decode for any assigned arch.
+"""Serving engines: prefill + KV-cache decode for any assigned arch.
 
-A fixed-slot batched engine (the satellite tier serves small batches;
-the ground tier large ones).  ``generate`` runs prompt prefill once,
-grafts the prefix cache into a full-length cache, then steps the
-jit-compiled ``decode_step``.
+Two engines share the model's cache layout contract:
+
+  * ``ServingEngine`` — fixed-slot batches (seed behavior): every
+    request is padded to the longest prompt and the whole batch drains
+    before the next one starts.  The satellite tier serves small
+    batches (latency/power bound); fine there.
+  * ``ContinuousEngine`` — continuous batching for the throughput-bound
+    ground tier: a ``SlotManager`` owns one ``(n_slots, ..., max_seq,
+    ...)`` KV cache; requests are prefilled individually, grafted into
+    whichever slot is free, and all active slots step together through
+    ONE jit-compiled ``decode_step`` with per-slot position vectors.
+    Finished sequences are evicted immediately so queued arrivals join
+    mid-flight instead of waiting for a batch to drain.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Optional
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -16,6 +25,7 @@ import numpy as np
 
 from repro.config import ModelConfig
 from repro.models import transformer as T
+from repro.serving.batching import Request, RequestQueue
 
 
 def _graft(template: jax.Array, got: jax.Array) -> jax.Array:
@@ -91,3 +101,206 @@ class ServingEngine:
         return GenerateResult(tokens=out,
                               logits_last=np.asarray(cur_logits, np.float32),
                               prompt_logits=prompt_logits)
+
+
+# ==========================================================================
+# continuous batching
+# ==========================================================================
+
+@dataclass
+class RequestResult:
+    rid: int
+    tokens: np.ndarray                 # (n_new,) greedy continuation
+    prompt_len: int
+    admitted_step: int                 # engine clock at admission
+    finished_step: int = 0
+
+
+@dataclass
+class _SlotState:
+    request: Request
+    pos: int                           # absolute position of the NEXT write
+    next_tok: int                      # last emitted token (next decode input)
+    emitted: List[int] = field(default_factory=list)
+    admitted_step: int = 0
+
+
+class SlotManager:
+    """Owns the multi-slot KV cache and per-slot occupancy.
+
+    The cache is ``models.transformer.init_cache(cfg, n_slots, max_seq)``
+    — slot ``i`` is batch row ``i`` of every leaf.  Admission grafts a
+    single-sequence prefix cache into a free slot; eviction just frees
+    the slot id: stale keys/values beyond a new occupant's prefix are
+    masked out by the per-slot ``kv_len`` until overwritten.
+    """
+
+    def __init__(self, cfg: ModelConfig, n_slots: int, max_seq: int):
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.cache = T.init_cache(cfg, n_slots, max_seq)
+        self.states: List[Optional[_SlotState]] = [None] * n_slots
+        self._graft = jax.jit(T.graft_slot_cache)
+
+    # -- occupancy ---------------------------------------------------------
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.states) if s is None]
+
+    def active_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.states) if s is not None]
+
+    def any_active(self) -> bool:
+        return any(s is not None for s in self.states)
+
+    # -- admission / eviction ---------------------------------------------
+    def place(self, slot: int, prefix_cache, state: _SlotState) -> None:
+        assert self.states[slot] is None, f"slot {slot} occupied"
+        self.cache = self._graft(self.cache, prefix_cache, jnp.int32(slot))
+        self.states[slot] = state
+
+    def evict(self, slot: int) -> None:
+        self.states[slot] = None
+
+    # -- batched decode inputs --------------------------------------------
+    def decode_inputs(self):
+        """(tokens (n_slots, 1) int32, pos (n_slots,) int32).  Inactive
+        slots feed a dummy token at position 0 of their own (private)
+        cache row, leaving live garbage there.  That is safe ONLY because
+        ``place``'s graft rewrites positions [0, prefix) before the slot
+        is read again — any future layout change (e.g. paged KV) must
+        preserve an equivalent overwrite-before-read guarantee."""
+        toks = np.zeros((self.n_slots, 1), np.int32)
+        pos = np.zeros((self.n_slots,), np.int32)
+        for i, s in enumerate(self.states):
+            if s is not None:
+                toks[i, 0] = s.next_tok
+                pos[i] = s.pos
+        return toks, pos
+
+
+class ContinuousEngine:
+    """Continuous-batching greedy decoding.
+
+    Supported families: dense / moe (incl. MLA) / hybrid / ssm.  vlm and
+    audio need per-request side inputs (patch embeds, encoder frames)
+    and are served by the fixed-slot engine.
+
+    Attention-cached families bucket prompts (right-padded to the next
+    power of two) so admission prefills hit a handful of compiled
+    shapes; causal masking plus per-slot ``kv_len`` make the pad
+    positions invisible.  Recurrent families (hybrid/ssm) prefill at the
+    exact prompt length — their prefix state integrates every input
+    position, so padding would change it.
+    """
+
+    FAMILIES = ("dense", "moe", "hybrid", "ssm")
+
+    def __init__(self, cfg: ModelConfig, params, *, n_slots: int = 4,
+                 max_seq: int = 2048, queue_capacity: Optional[int] = None):
+        if cfg.family not in self.FAMILIES:
+            raise NotImplementedError(
+                f"ContinuousEngine does not serve family {cfg.family!r}")
+        self.cfg = cfg
+        self.params = params
+        self.max_seq = max_seq
+        self.slots = SlotManager(cfg, n_slots, max_seq)
+        self.queue = RequestQueue(max_batch=n_slots,
+                                  capacity=queue_capacity)
+        self.clock = 0                        # decode-step ticks
+        self.finish_order: List[int] = []
+        self.results: Dict[int, RequestResult] = {}
+        self._prefill = jax.jit(
+            lambda p, t: T.forward(p, cfg, {"tokens": t},
+                                   moe_drop_free=True,
+                                   return_cache=True, remat=False))
+        self._decode = jax.jit(
+            lambda p, c, t, pos: T.decode_step(p, cfg, c, t, pos))
+
+    @classmethod
+    def init(cls, cfg: ModelConfig, seed: int = 0, **kw):
+        params = T.init_params(jax.random.PRNGKey(seed), cfg,
+                               max_seq=kw.get("max_seq", 2048))
+        return cls(cfg, params, **kw)
+
+    # -- admission ---------------------------------------------------------
+    def submit(self, req: Request) -> int:
+        if req.max_new < 1:
+            raise ValueError(
+                f"request {req.rid}: max_new must be >= 1 "
+                "(the prefill always emits one token)")
+        if len(req.prompt) + req.max_new > self.max_seq:
+            raise ValueError(
+                f"request {req.rid}: prompt {len(req.prompt)} + max_new "
+                f"{req.max_new} exceeds max_seq {self.max_seq}")
+        return self.queue.submit(req)
+
+    def _bucket_len(self, S: int) -> int:
+        if self.cfg.family in ("hybrid", "ssm"):
+            return S                          # recurrent state is length-exact
+        b = 8
+        while b < S:
+            b *= 2
+        return min(b, self.max_seq)
+
+    def _admit(self, req: Request, slot: int) -> None:
+        S = len(req.prompt)
+        bucket = self._bucket_len(S)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :S] = req.prompt
+        logits, _, pcache = self._prefill(self.params, jnp.asarray(toks))
+        first = int(jnp.argmax(logits[0, S - 1]))
+        st = _SlotState(request=req, pos=S, next_tok=first, emitted=[first],
+                        admitted_step=self.clock)
+        self.slots.place(slot, pcache, st)
+        if len(st.emitted) >= req.max_new:    # max_new == 1: done at prefill
+            self._finish(slot)
+
+    def _finish(self, slot: int) -> None:
+        st = self.slots.states[slot]
+        req = st.request
+        self.results[req.rid] = RequestResult(
+            rid=req.rid, tokens=np.asarray(st.emitted, np.int64),
+            prompt_len=len(req.prompt), admitted_step=st.admitted_step,
+            finished_step=self.clock)
+        self.finish_order.append(req.rid)
+        self.slots.evict(slot)
+
+    # -- the serve loop ----------------------------------------------------
+    def step(self) -> List[int]:
+        """Admit arrived requests into free slots, run ONE batched decode
+        step over all slots, evict finished sequences.  Returns the rids
+        finished during this step."""
+        before = len(self.finish_order)
+        for slot in self.slots.free_slots():
+            req = self.queue.peek()
+            if req is None or req.arrival_t > self.clock:
+                break
+            self._admit(self.queue.pop(), slot)
+        if not self.slots.any_active():
+            self.clock += 1                   # idle tick: wait for arrivals
+            return self.finish_order[before:]
+        toks, pos = self.slots.decode_inputs()
+        logits, self.slots.cache = self._decode(
+            self.params, self.slots.cache, jnp.asarray(toks),
+            jnp.asarray(pos))
+        self.clock += 1
+        nxt = np.asarray(jnp.argmax(logits[:, 0], -1))
+        for slot in self.slots.active_slots():
+            st = self.slots.states[slot]
+            st.emitted.append(int(nxt[slot]))
+            st.next_tok = int(nxt[slot])
+            st.pos += 1
+            if len(st.emitted) >= st.request.max_new:
+                self._finish(slot)
+        return self.finish_order[before:]
+
+    def run(self, requests: Optional[List[Request]] = None
+            ) -> Dict[int, RequestResult]:
+        """Drain: submit ``requests`` (sorted by arrival), then step until
+        queue and slots are empty.  Returns rid -> RequestResult."""
+        for r in sorted(requests or [], key=lambda r: r.arrival_t):
+            self.submit(r)
+        while len(self.queue) or self.slots.any_active():
+            self.step()
+        return self.results

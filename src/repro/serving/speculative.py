@@ -40,7 +40,10 @@ class SpecResult:
 
 
 def _greedy_next(params, cfg, tokens):
-    logits, _ = T.forward(params, cfg, {"tokens": tokens}, remat=False)
+    # serving forward: drop-free MoE routing keeps draft/verify rounds
+    # (which see the same prefix at different batch lengths) consistent
+    logits, _ = T.forward(params, cfg, {"tokens": tokens},
+                          moe_drop_free=True, remat=False)
     return jnp.argmax(logits[:, -1], axis=-1)
 
 
@@ -69,7 +72,8 @@ def speculative_generate(draft_params, draft_cfg: ModelConfig,
         cand = jnp.concatenate(
             [seq, jnp.asarray(draft_toks, jnp.int32)[None]], axis=1)
         logits, _ = T.forward(target_params, target_cfg,
-                              {"tokens": cand}, remat=False)
+                              {"tokens": cand}, moe_drop_free=True,
+                              remat=False)
         # target's next-token prediction at each draft position
         start = seq.shape[1] - 1
         preds = np.asarray(

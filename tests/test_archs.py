@@ -12,6 +12,8 @@ from repro.training.loop import init_state, train
 
 from helpers import make_batch
 
+pytestmark = pytest.mark.slow   # trains/decodes every assigned arch
+
 
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_forward_and_loss(arch):

@@ -1,0 +1,90 @@
+"""CollaborativeEngine edge cases: no ground contact, empty batches, and
+int8-quantized payload byte accounting — cheap stub tiers, no training."""
+import numpy as np
+import pytest
+
+from repro.core.cascade import CascadeConfig, CollaborativeEngine
+from repro.core.gating import ConfidenceGate
+from repro.core.link import payload_bytes_raw, payload_bytes_result
+
+ITEM_SHAPE = (16, 16, 3)
+
+
+def _logits(n, v=4, seed=0, sharp=False):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, v)).astype(np.float32)
+    if sharp:                       # confident: one dominant class
+        x[np.arange(n), rng.integers(0, v, n)] += 25.0
+    return x
+
+
+def _engine(onboard_logits, ground_logits=None, **cfg_kw):
+    cfg = CascadeConfig(gate=ConfidenceGate("max_prob", 0.99), **cfg_kw)
+    ground = (lambda b: ground_logits[:len(b)]) if ground_logits is not None \
+        else (lambda b: pytest.fail("ground tier must not be called"))
+    return CollaborativeEngine(lambda b: onboard_logits, ground, cfg)
+
+
+def test_ground_unavailable_forces_zero_escalation():
+    """Outside a contact window nothing escalates: predictions are the
+    onboard argmax and only compact results are downlinked."""
+    n = 12
+    logits = _logits(n, seed=1)                       # diffuse: would escalate
+    eng = _engine(logits)                             # ground tier traps
+    res = eng.run(np.zeros((n, *ITEM_SHAPE), np.uint8), ITEM_SHAPE,
+                  ground_available=False)
+    assert not res.escalated.any()
+    np.testing.assert_array_equal(res.predictions, logits.argmax(-1))
+    s = res.ledger.summary()
+    assert s["items_escalated"] == 0
+    assert s["bytes_raw_escalated"] == 0
+    assert s["bytes_downlinked"] == payload_bytes_result(n)
+
+
+def test_empty_batch():
+    logits = _logits(0)
+    eng = _engine(logits, ground_logits=logits)
+    res = eng.run(np.zeros((0, *ITEM_SHAPE), np.uint8), ITEM_SHAPE)
+    assert res.predictions.shape == (0,)
+    assert res.escalated.shape == (0,)
+    s = res.ledger.summary()
+    assert s["items_total"] == 0
+    assert s["bytes_downlinked"] == 0
+    assert s["escalation_rate"] == 0.0
+
+
+@pytest.mark.parametrize("dtype_bytes", [1, 4])
+def test_quantized_payload_byte_accounting(dtype_bytes):
+    """quantize_payload=True charges int8 elements + one 4-byte f32 scale
+    per escalated item, independent of the raw dtype width."""
+    n = 10
+    logits = _logits(n, seed=2)                       # diffuse: all escalate
+    ground = _logits(n, seed=3, sharp=True)
+    eng = _engine(logits, ground_logits=ground,
+                  quantize_payload=True, item_dtype_bytes=dtype_bytes)
+    res = eng.run(np.zeros((n, *ITEM_SHAPE), np.float32), ITEM_SHAPE)
+    n_esc = int(res.escalated.sum())
+    assert n_esc == n                                 # 0.99 threshold
+    n_elems = int(np.prod(ITEM_SHAPE))
+    want_raw = n_esc * (n_elems + 4)                  # int8 + f32 scale
+    s = res.ledger.summary()
+    assert s["bytes_raw_escalated"] == want_raw
+    assert s["bytes_downlinked"] == want_raw + payload_bytes_result(0)
+    # the baseline still pays full-width raw bytes
+    assert s["bytes_bentpipe_baseline"] == n * payload_bytes_raw(
+        1, ITEM_SHAPE, dtype_bytes)
+
+
+def test_quantized_never_beats_itself_unquantized():
+    """For multi-byte raw dtypes the quantized escalation payload is
+    strictly smaller; for uint8 it is 4 bytes/item larger (the scale)."""
+    n = 6
+    logits = _logits(n, seed=4)
+    ground = _logits(n, seed=5, sharp=True)
+    bytes_for = {}
+    for quant in (False, True):
+        eng = _engine(logits, ground_logits=ground,
+                      quantize_payload=quant, item_dtype_bytes=4)
+        res = eng.run(np.zeros((n, *ITEM_SHAPE), np.float32), ITEM_SHAPE)
+        bytes_for[quant] = res.ledger.get("bytes_raw_escalated")
+    assert bytes_for[True] < bytes_for[False]

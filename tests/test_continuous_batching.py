@@ -1,0 +1,234 @@
+"""Continuous-batching engine: slot admission/eviction, mid-flight join
+determinism, backpressure, and the ragged-length attention paths it
+relies on."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import get_reduced_config
+from repro.models import transformer as T
+from repro.serving.batching import (QueueFull, Request, RequestQueue,
+                                    poisson_trace)
+from repro.serving.engine import ContinuousEngine, ServingEngine
+
+from helpers import f32_cfg
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return f32_cfg("smollm-360m")
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return T.init_params(jax.random.PRNGKey(0), cfg, max_seq=64)
+
+
+def _req(rng, n, max_new, arrival_t=0.0, vocab=64):
+    return Request(prompt=rng.integers(1, vocab, n).astype(np.int32),
+                   max_new=max_new, arrival_t=arrival_t)
+
+
+# ---------------------------------------------------------------------------
+# admission / eviction
+# ---------------------------------------------------------------------------
+
+def test_admission_and_eviction_order(cfg, params):
+    """Requests are admitted FIFO into the lowest free slot; a short
+    request finishes first and its slot is reused by the queued one."""
+    eng = ContinuousEngine(cfg, params, n_slots=2, max_seq=64)
+    rng = np.random.default_rng(0)
+    short = _req(rng, 5, 3)
+    long = _req(rng, 5, 12)
+    queued = _req(rng, 5, 3)
+    for r in (short, long, queued):
+        eng.submit(r)
+
+    eng.step()                             # admits short+long, 1 decode step
+    assert eng.slots.states[0].request.rid == short.rid
+    assert eng.slots.states[1].request.rid == long.rid
+    assert len(eng.queue) == 1             # queued waits: no free slot
+
+    while queued.rid not in eng.results or long.rid not in eng.results:
+        eng.step()
+    # short finished first; queued joined mid-flight in short's slot and
+    # still finished before the long request drained
+    assert eng.finish_order == [short.rid, queued.rid, long.rid]
+    q_res = eng.results[queued.rid]
+    assert q_res.admitted_step < eng.results[long.rid].finished_step
+    assert len(q_res.tokens) == 3
+
+
+def test_all_results_complete(cfg, params):
+    eng = ContinuousEngine(cfg, params, n_slots=3, max_seq=64)
+    trace = poisson_trace(9, rate=0.8, prompt_lens=(3, 12), max_new=(1, 9),
+                          vocab_size=cfg.vocab_size, seed=3)
+    results = eng.run(trace)
+    assert sorted(results) == sorted(r.rid for r in trace)
+    by_rid = {r.rid: r for r in trace}
+    for rid, res in results.items():
+        assert len(res.tokens) == by_rid[rid].max_new
+        assert res.finished_step >= res.admitted_step
+
+
+# ---------------------------------------------------------------------------
+# determinism: joining mid-flight must not change a sequence's tokens
+# ---------------------------------------------------------------------------
+
+def test_midflight_join_matches_solo_run(cfg, params):
+    rng = np.random.default_rng(1)
+    probe = _req(rng, 9, 7)
+    filler = _req(rng, 13, 10)
+
+    solo = ContinuousEngine(cfg, params, n_slots=2, max_seq=64)
+    want = solo.run([Request(prompt=probe.prompt, max_new=probe.max_new)])
+    (want_tokens,) = [r.tokens for r in want.values()]
+
+    joint = ContinuousEngine(cfg, params, n_slots=2, max_seq=64)
+    probe.arrival_t = 4.0                  # joins while filler is decoding
+    got = joint.run([filler, probe])
+    np.testing.assert_array_equal(got[probe.rid].tokens, want_tokens)
+
+
+@pytest.mark.slow   # compiles prefill+decode for one arch per family
+@pytest.mark.parametrize("arch", [
+    "qwen3-moe-30b-a3b",    # moe (drop-free routing path)
+    "deepseek-v3-671b",     # MLA per-slot absorbed decode
+    "zamba2-7b",            # hybrid: recurrent state + shared attn
+    "xlstm-1.3b",           # pure recurrent (exact-length admission)
+])
+def test_midflight_join_matches_solo_all_families(arch):
+    fam_cfg = f32_cfg(arch)
+    fam_params = T.init_params(jax.random.PRNGKey(0), fam_cfg, max_seq=64)
+    rng = np.random.default_rng(6)
+    probe = Request(prompt=rng.integers(
+        1, fam_cfg.vocab_size, 6).astype(np.int32), max_new=5)
+    filler = Request(prompt=rng.integers(
+        1, fam_cfg.vocab_size, 9).astype(np.int32), max_new=7)
+
+    solo = ContinuousEngine(fam_cfg, fam_params, n_slots=2, max_seq=64)
+    want = solo.run([Request(prompt=probe.prompt, max_new=probe.max_new)])
+    (want_tokens,) = [r.tokens for r in want.values()]
+
+    joint = ContinuousEngine(fam_cfg, fam_params, n_slots=2, max_seq=64)
+    probe.arrival_t = 2.0
+    got = joint.run([filler, probe])
+    np.testing.assert_array_equal(got[probe.rid].tokens, want_tokens)
+
+
+def test_continuous_matches_fixed_slot_engine(cfg, params):
+    """Same params, same prompt: the continuous engine's greedy tokens
+    equal the seed fixed-slot engine's."""
+    rng = np.random.default_rng(2)
+    prompt = rng.integers(1, cfg.vocab_size, 11).astype(np.int32)
+    fixed = ServingEngine(cfg, params, max_seq=64)
+    want = fixed.generate(prompt[None], max_new=6).tokens[0]
+    eng = ContinuousEngine(cfg, params, n_slots=2, max_seq=64)
+    got = eng.run([Request(prompt=prompt, max_new=6)])
+    np.testing.assert_array_equal(list(got.values())[0].tokens, want)
+
+
+# ---------------------------------------------------------------------------
+# backpressure
+# ---------------------------------------------------------------------------
+
+def test_full_queue_backpressure(cfg, params):
+    eng = ContinuousEngine(cfg, params, n_slots=2, max_seq=64,
+                           queue_capacity=3)
+    rng = np.random.default_rng(4)
+    for _ in range(3):
+        eng.submit(_req(rng, 4, 2))
+    with pytest.raises(QueueFull):
+        eng.submit(_req(rng, 4, 2))
+    eng.step()                             # admission frees queue space
+    assert len(eng.queue) == 1
+    eng.submit(_req(rng, 4, 2))            # accepted again
+    results = eng.run()
+    assert len(results) == 4
+
+
+def test_submit_rejects_overlong_request(cfg, params):
+    eng = ContinuousEngine(cfg, params, n_slots=1, max_seq=16)
+    rng = np.random.default_rng(5)
+    with pytest.raises(ValueError):
+        eng.submit(_req(rng, 12, 8))       # 12 + 8 > 16
+    with pytest.raises(ValueError):
+        eng.submit(_req(rng, 4, 0))        # prefill always emits one token
+
+
+def test_unsupported_family_raises(params):
+    vlm = get_reduced_config("qwen2-vl-2b")
+    with pytest.raises(NotImplementedError):
+        ContinuousEngine(vlm, {}, n_slots=1, max_seq=32)
+
+
+# ---------------------------------------------------------------------------
+# ragged-length attention plumbing the engine depends on
+# ---------------------------------------------------------------------------
+
+def test_decode_step_vector_pos_matches_scalar(cfg, params):
+    """With every slot at the SAME depth, the per-slot path must agree
+    with the scalar path bit-for-bit."""
+    B, S = 3, 8
+    toks = jax.random.randint(jax.random.PRNGKey(0), (B, S), 0,
+                              cfg.vocab_size)
+    from repro.serving.engine import _graft
+    _, _, cache = T.forward(params, cfg, {"tokens": toks},
+                            return_cache=True, remat=False)
+    cache = jax.tree.map(_graft, T.init_cache(cfg, B, 32), cache)
+    nxt = jax.random.randint(jax.random.PRNGKey(1), (B, 1), 0,
+                             cfg.vocab_size)
+    lo_s, _ = T.decode_step(params, cfg, cache, nxt, jnp.int32(S))
+    lo_v, _ = T.decode_step(params, cfg, cache, nxt,
+                            jnp.full((B,), S, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(lo_s), np.asarray(lo_v))
+
+
+def test_chunked_attention_per_sequence_kv_len():
+    from repro.models.attention import chunked_attention
+    key = jax.random.PRNGKey(0)
+    B, S, H, D = 3, 16, 2, 8
+    q = jax.random.normal(key, (B, 1, H, D))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, H, D))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, H, D))
+    lens = jnp.asarray([3, 9, 16], jnp.int32)
+    batched = chunked_attention(q, k, v, causal=False, kv_len=lens)
+    for i, n in enumerate([3, 9, 16]):
+        solo = chunked_attention(q[i:i + 1], k[i:i + 1], v[i:i + 1],
+                                 causal=False, kv_len=jnp.int32(n))
+        np.testing.assert_allclose(np.asarray(batched[i]),
+                                   np.asarray(solo[0]), atol=1e-6)
+
+
+def test_decode_kernel_per_sequence_kv_len():
+    from repro.kernels import ops, ref
+    B, S, H, Hkv, D = 3, 128, 4, 2, 16
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, H, D))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, Hkv, D))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, Hkv, D))
+    lens = jnp.asarray([1, 57, 128], jnp.int32)
+    got = ops.decode_attention(q, k, v, lens, block_k=64)
+    want = ref.decode_attention_ref(q, k, v, lens)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_graft_slot_cache_writes_only_target_slot(cfg, params):
+    big = T.init_cache(cfg, 3, 32)
+    toks = jax.random.randint(jax.random.PRNGKey(0), (1, 8), 0,
+                              cfg.vocab_size)
+    _, _, small = T.forward(params, cfg, {"tokens": toks},
+                            return_cache=True, remat=False)
+    out = T.graft_slot_cache(big, small, jnp.int32(1))
+    for leaf_b, leaf_o, leaf_s in zip(jax.tree.leaves(big),
+                                      jax.tree.leaves(out),
+                                      jax.tree.leaves(small)):
+        # untouched slots identical (zeros), target slot holds the prefix
+        np.testing.assert_array_equal(np.asarray(leaf_o[:, 0]),
+                                      np.asarray(leaf_b[:, 0]))
+        np.testing.assert_array_equal(np.asarray(leaf_o[:, 2]),
+                                      np.asarray(leaf_b[:, 2]))
+        got = np.asarray(leaf_o[:, 1, :leaf_s.shape[2]], np.float32)
+        np.testing.assert_array_equal(got,
+                                      np.asarray(leaf_s[:, 0], np.float32))

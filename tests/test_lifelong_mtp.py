@@ -12,6 +12,8 @@ from repro.training.lifelong import (KnowledgeLibrary, LifelongConfig,
                                      lifelong_update)
 from repro.training.loop import init_state, train
 
+pytestmark = pytest.mark.slow   # training loops
+
 
 def _stream(vocab, seed):
     return TokenStream(TokenStreamConfig(vocab_size=vocab, seq_len=64,

@@ -15,6 +15,8 @@ from repro.models import transformer as T
 from repro.training import optim
 from repro.training.loop import init_state, train
 
+pytestmark = pytest.mark.slow   # trains the onboard/ground LM pair
+
 
 @pytest.fixture(scope="module")
 def lm_tiers():

@@ -95,6 +95,7 @@ def test_mlstm_chunked_matches_stepwise():
 # prefill + decode == full forward (per family)
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow   # full per-arch prefill->decode sweep
 @pytest.mark.parametrize("arch", [
     "smollm-360m",          # dense GQA, tied embeddings
     "granite-34b",          # MQA + gelu mlp
@@ -115,7 +116,9 @@ def test_prefill_decode_consistency(arch):
 
     # full forward over S+1 tokens
     full_batch = {"tokens": tokens, **batch}
-    logits_full, _ = T.forward(eng.params, cfg, full_batch, remat=False)
+    # serving-equivalence reference: drop-free MoE routing like the engine
+    logits_full, _ = T.forward(eng.params, cfg, full_batch,
+                               moe_drop_free=True, remat=False)
     want = logits_full[:, -1]
 
     # prefill S tokens, decode token S

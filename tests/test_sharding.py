@@ -15,12 +15,20 @@ def mesh():
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
+def _abstract_mesh(shape, names):
+    """jax >= 0.4.38 takes (shape, names); 0.4.37 takes (name, size) pairs."""
+    try:
+        return jax.sharding.AbstractMesh(shape, names)
+    except TypeError:
+        return jax.sharding.AbstractMesh(tuple(zip(names, shape)))
+
+
 def test_pspec_divisibility_fallback(mesh):
     with PS.mesh_rules(mesh):
         # model axis size 1 divides everything -> sharded entries appear
         spec = PS.pspec_for((16, 15), [None, "model"])
         assert spec == P(None, "model")
-    big = jax.sharding.AbstractMesh((1, 16), ("data", "model"))
+    big = _abstract_mesh((1, 16), ("data", "model"))
     with PS.mesh_rules(big):
         # 15 heads cannot shard over model=16 -> dropped
         spec = PS.pspec_for((4, 15), [None, "model"])
@@ -31,7 +39,7 @@ def test_pspec_divisibility_fallback(mesh):
 
 
 def test_pspec_duplicate_axis_guard():
-    big = jax.sharding.AbstractMesh((2, 2), ("data", "model"))
+    big = _abstract_mesh((2, 2), ("data", "model"))
     with PS.mesh_rules(big, {"a": ("data", "model"), "b": ("data",)}):
         spec = PS.pspec_for((4, 4), ["a", "b"])
         # "b" would reuse "data" -> dropped

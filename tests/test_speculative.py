@@ -9,6 +9,8 @@ from repro.serving.speculative import (greedy_generate, speculative_generate)
 from repro.training import optim
 from repro.training.loop import init_state, train
 
+pytestmark = pytest.mark.slow   # trains the draft/target pair
+
 
 @pytest.fixture(scope="module")
 def pair():

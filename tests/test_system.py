@@ -12,6 +12,8 @@ from repro.core.filtering import filter_tiles
 from repro.core.gating import ConfidenceGate
 from repro.data import eo
 
+pytestmark = pytest.mark.slow   # trains both tier classifiers
+
 
 @pytest.fixture(scope="module")
 def tiers():

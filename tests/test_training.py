@@ -42,6 +42,7 @@ def test_lr_schedule_shape():
     assert abs(lrs[2] - 1e-3) < 1e-9
 
 
+@pytest.mark.slow
 def test_loss_decreases_on_learnable_stream():
     cfg = get_reduced_config("smollm-360m")
     opt_cfg = optim.OptimConfig(lr=2e-3, warmup_steps=5, total_steps=60)
@@ -65,6 +66,7 @@ def test_fedavg_weighted_mean():
     np.testing.assert_allclose(np.array(out2["w"]), 0.0)
 
 
+@pytest.mark.slow
 def test_federated_round_improves_loss():
     cfg = get_reduced_config("smollm-360m")
     fed = FedConfig(n_satellites=2, local_steps=8, rounds=2)
@@ -81,6 +83,7 @@ def test_federated_round_improves_loss():
     assert all(0 < w <= 1 for r in out["rounds"] for w in r["weights"])
 
 
+@pytest.mark.slow
 def test_incremental_update_adapts_to_drift():
     cfg = get_reduced_config("smollm-360m")
     opt_cfg = optim.OptimConfig(lr=2e-3, warmup_steps=2, total_steps=40)
