@@ -1,14 +1,21 @@
-"""Serving throughput: fixed-slot vs continuous batching.
+"""Serving throughput: fixed-slot vs continuous batching (paged KV).
 
 Replays ONE Poisson arrival trace (mixed prompt lengths, heterogeneous
-decode budgets) through both engines and reports useful tokens per
-second.  The fixed-slot engine pads every request to the longest prompt
-in its batch and decodes the batch's max ``max_new`` for every row —
-slots holding finished sequences burn steps until the batch drains.
-The continuous engine evicts finished sequences and admits queued
-arrivals mid-flight, so nearly every slot-step emits a useful token.
+decode budgets) through three configurations and reports useful tokens
+per second plus KV-cache memory:
 
-Writes the headline numbers to ``BENCH_serving.json`` in the repo root.
+  * ``fixed_slot`` — the seed baseline: every request padded to the
+    longest prompt in its batch, the batch decoded to its max max_new.
+  * ``continuous`` — continuous batching over the PAGED KV layout (the
+    default): a global page pool + per-sequence block tables, so cache
+    memory is ``pool_pages * page_size`` positions instead of
+    ``n_slots * max_seq``.
+  * ``continuous_contiguous`` — continuous batching over the contiguous
+    per-slot layout (memory baseline the paged gate compares against).
+
+The paged run must stay token-exact with the contiguous run, hold the
+>= 1.5x fixed-slot speedup, and use strictly less KV-cache memory —
+all three are CI-gated on ``BENCH_serving.json``.
 
     PYTHONPATH=src python -m benchmarks.serving_throughput
 """
@@ -26,6 +33,7 @@ MAX_SEQ = 64
 ARRIVAL_RATE = 0.5          # mean arrivals per decode step
 PROMPT_LENS = (4, 16)
 MAX_NEW = (2, 24)
+PAGE_SIZE = 16
 
 
 def _make_engine_inputs():
@@ -39,12 +47,18 @@ def _make_engine_inputs():
     return cfg, trace
 
 
+def _clone(trace):
+    return [r.clone() for r in trace]
+
+
 def _serve_fixed(cfg, params, trace):
     """Fixed-slot baseline: the seed ``RequestQueue.next_batch``
     discipline (FIFO, pad to the batch's longest prompt) with each batch
     decoded for its max ``max_new``.  The clock (in decode steps) only
     advances while the batch drains, so a new batch forms from whatever
-    has arrived by then.  Returns (useful_tokens, wall_seconds)."""
+    has arrived by then.  Returns (useful_tokens, wall_seconds, kv_stats,
+    emitted_tokens) like ``_serve_continuous`` — the last two are empty/
+    None placeholders (no KV accounting or exactness check here)."""
     from repro.serving.batching import RequestQueue
     from repro.serving.engine import ServingEngine
 
@@ -64,18 +78,21 @@ def _serve_fixed(cfg, params, trace):
         eng.generate(batch.tokens, max_new=steps)
         useful += sum(r.max_new for r in batch.requests)
         clock += steps
-    return useful, time.perf_counter() - t0
+    return useful, time.perf_counter() - t0, {}, None
 
 
-def _serve_continuous(cfg, params, trace):
+def _serve_continuous(cfg, params, trace, kv_layout):
     from repro.serving.engine import ContinuousEngine
 
-    eng = ContinuousEngine(cfg, params, n_slots=N_SLOTS, max_seq=MAX_SEQ)
+    kw = {"page_size": PAGE_SIZE} if kv_layout == "paged" else {}
+    eng = ContinuousEngine(cfg, params, n_slots=N_SLOTS, max_seq=MAX_SEQ,
+                           kv_layout=kv_layout, **kw)
     t0 = time.perf_counter()
-    results = eng.run(list(trace))
+    results = eng.run(_clone(trace))
     wall = time.perf_counter() - t0
     useful = sum(len(r.tokens) for r in results.values())
-    return useful, wall
+    tokens_by_order = [results[k].tokens for k in sorted(results)]
+    return useful, wall, eng.kv_cache_stats(), tokens_by_order
 
 
 def run():
@@ -85,24 +102,43 @@ def run():
     cfg, trace = _make_engine_inputs()
     params = T.init_params(jax.random.PRNGKey(0), cfg, max_seq=MAX_SEQ)
 
+    serves = (
+        ("fixed_slot", lambda: _serve_fixed(cfg, params, _clone(trace))),
+        ("continuous", lambda: _serve_continuous(cfg, params, trace,
+                                                 "paged")),
+        ("continuous_contiguous",
+         lambda: _serve_continuous(cfg, params, trace, "contiguous")),
+    )
     rows = []
     out = {}
-    for name, serve in (("fixed_slot", _serve_fixed),
-                        ("continuous", _serve_continuous)):
-        serve(cfg, params, trace)              # warmup: populate jit caches
-        tokens, wall = serve(cfg, params, trace)
+    tokens_seen = {}
+    for name, serve in serves:
+        serve()                            # warmup: populate jit caches
+        tokens, wall, kv_stats, emitted = serve()
         tps = tokens / wall
         out[name] = {"useful_tokens": tokens, "wall_s": round(wall, 4),
-                     "tokens_per_s": round(tps, 2)}
+                     "tokens_per_s": round(tps, 2), **kv_stats}
+        tokens_seen[name] = emitted
         rows.append((f"serving_{name}", wall * 1e6 / max(tokens, 1),
                      {"tokens_per_s": round(tps, 2)}))
 
     out["speedup"] = round(out["continuous"]["tokens_per_s"]
                            / out["fixed_slot"]["tokens_per_s"], 3)
+    paged_toks = tokens_seen["continuous"]
+    contig_toks = tokens_seen["continuous_contiguous"]
+    out["paged_token_exact"] = (
+        len(paged_toks) == len(contig_toks)
+        and all(np.array_equal(a, b)
+                for a, b in zip(paged_toks, contig_toks)))
+    out["paged_vs_contiguous_kv_bytes"] = round(
+        out["continuous"]["kv_cache_bytes"]
+        / out["continuous_contiguous"]["kv_cache_bytes"], 4)
     out["trace"] = {"n_requests": N_REQUESTS, "n_slots": N_SLOTS,
+                    "max_seq": MAX_SEQ,
                     "arrival_rate": ARRIVAL_RATE,
                     "prompt_lens": list(PROMPT_LENS),
-                    "max_new": list(MAX_NEW)}
+                    "max_new": list(MAX_NEW),
+                    "page_size": PAGE_SIZE}
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     with open(os.path.join(root, "BENCH_serving.json"), "w") as f:
         json.dump(out, f, indent=2, sort_keys=True)

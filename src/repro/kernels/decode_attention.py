@@ -67,12 +67,20 @@ def decode_attention_kernel(q, k, v, kv_len, *, block_k: int = 512,
                             interpret: bool = False):
     """q: (B, H, D); k, v: (B, S, Hkv, D); kv_len: () int32 valid length,
     or (B,) int32 per-sequence valid lengths (continuous batching: every
-    slot decodes against its own ragged prefix).  Returns (B, H, D)."""
+    slot decodes against its own ragged prefix).  Any cache length works:
+    S is zero-padded up to a multiple of block_k — the pad positions sit
+    at kpos >= S >= kv_len, so the validity mask already excludes them.
+    Returns (B, H, D)."""
     B, H, D = q.shape
     S, Hkv = k.shape[1], k.shape[2]
     g = H // Hkv
     block_k = min(block_k, S)
-    assert S % block_k == 0, (S, block_k)
+    pad = -S % block_k
+    if pad:
+        widths = ((0, 0), (0, pad), (0, 0), (0, 0))
+        k = jnp.pad(k, widths)
+        v = jnp.pad(v, widths)
+        S += pad
     n_kv = S // block_k
     grid = (B, Hkv, n_kv)
 

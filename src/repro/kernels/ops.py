@@ -10,6 +10,7 @@ import jax
 from repro.kernels.conf_gate import confidence_gate_kernel
 from repro.kernels.decode_attention import decode_attention_kernel
 from repro.kernels.flash_attention import flash_attention_kernel
+from repro.kernels.paged_decode_attention import paged_decode_attention_kernel
 from repro.kernels.int8_quant import int8_quantize_kernel
 from repro.kernels.ssm_scan import ssm_chunk_scan_kernel
 from repro.kernels import ref  # noqa: F401  (re-exported for tests)
@@ -28,6 +29,11 @@ def flash_attention(q, k, v, *, causal=True, window=0, **kw):
 def decode_attention(q, k, v, kv_len, **kw):
     return decode_attention_kernel(q, k, v, kv_len,
                                    interpret=not on_tpu(), **kw)
+
+
+def paged_decode_attention(q, k_pages, v_pages, block_tables, kv_len, **kw):
+    return paged_decode_attention_kernel(q, k_pages, v_pages, block_tables,
+                                         kv_len, interpret=not on_tpu(), **kw)
 
 
 def ssm_chunk_scan(x, dt, A, Bm, Cm, *, chunk=256, **kw):

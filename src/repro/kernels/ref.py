@@ -45,6 +45,21 @@ def decode_attention_ref(q, k, v, kv_len):
     return o.reshape(B, H, v.shape[-1]).astype(q.dtype)
 
 
+def paged_decode_attention_ref(q, k_pages, v_pages, block_tables, kv_len):
+    """Gather reference for the paged decode kernel.  q: (B,H,D);
+    k_pages/v_pages: (n_pages, page_size, Hkv, D); block_tables:
+    (B, max_pages) int32 page ids (positions [j*ps, (j+1)*ps) of
+    sequence b live in page block_tables[b, j]); kv_len: () or (B,)
+    valid positions.  Gathers the tables back into position order and
+    delegates to the contiguous oracle."""
+    B = q.shape[0]
+    kg = k_pages[block_tables]              # (B, max_pages, ps, Hkv, D)
+    vg = v_pages[block_tables]
+    kg = kg.reshape(B, -1, *k_pages.shape[2:])
+    vg = vg.reshape(B, -1, *v_pages.shape[2:])
+    return decode_attention_ref(q, kg, vg, kv_len)
+
+
 def ssm_chunk_scan_ref(x, dt, A, Bm, Cm, chunk):
     """Mamba2 SSD oracle — delegates to the model implementation (itself
     validated against a step-by-step sequential scan in tests)."""

@@ -112,6 +112,7 @@ def _grouped_scores(q, k):
 
 def chunked_attention(q, k, v, *, causal: bool, q_offset=0,
                       window: int = 0, kv_len: Optional[jax.Array] = None,
+                      kv_start: Optional[jax.Array] = None,
                       block_q: int = 1024) -> jax.Array:
     """Memory-bounded attention.  q: (B,Sq,H,D); k,v: (B,Skv,Hkv,D).
 
@@ -120,6 +121,9 @@ def chunked_attention(q, k, v, *, causal: bool, q_offset=0,
     kv_len: optional dynamic number of valid kv positions (decode);
         scalar, or (B,) for per-sequence lengths (continuous batching
         steps slots whose sequences are at different positions).
+    kv_start: optional first valid kv position, scalar or (B,) — the
+        paged decode path enforces a sliding window by lower bound
+        (kv positions there are absolute, not ring-buffered).
     """
     B, Sq, H, D = q.shape
     Skv, Hkv = k.shape[1], k.shape[2]
@@ -143,6 +147,13 @@ def chunked_attention(q, k, v, *, causal: bool, q_offset=0,
                 mask = mask & (kv_pos < kl)
             else:                                     # (B,) ragged lengths
                 mask = mask & (kv_pos[None, :] < kl[:, None]
+                               )[:, None, None, None]
+        if kv_start is not None:
+            ks = jnp.asarray(kv_start)
+            if ks.ndim == 0:
+                mask = mask & (kv_pos >= ks)
+            else:                                     # (B,) ragged starts
+                mask = mask & (kv_pos[None, :] >= ks[:, None]
                                )[:, None, None, None]
         s = jnp.where(mask, s, NEG_INF)
         p = jax.nn.softmax(s, axis=-1)
@@ -285,6 +296,63 @@ def attention_decode(p: dict, cfg: ModelConfig, x, cache_k, cache_v,
     return out, cache_k, cache_v
 
 
+def paged_attention_decode(p: dict, cfg: ModelConfig, x, pool_k, pool_v,
+                           pos, block_tables, *, window: int = 0,
+                           rope: bool = True, rope_pos=None):
+    """Single-token decode against a paged KV pool.
+
+    x: (B, 1, d).  pool_k/pool_v: (n_pages, page_size, Hkv, D) — the
+    layer's slice of the global page pool.  pos: (B,) absolute write
+    positions.  block_tables: (B, max_pages) int32 — entry j of row b is
+    the page holding positions [j*page_size, (j+1)*page_size) of
+    sequence b; unused entries point at the scratch page 0.
+
+    The new k/v land in page ``bt[b, pos//page_size]`` at offset
+    ``pos % page_size``; attention gathers the table's pages back into
+    position order, masked to ``pos+1`` valid positions (and, for
+    sliding-window archs, lower-bounded at ``pos+1-window`` — pages here
+    hold absolute positions, not a ring buffer).  Freshly allocated
+    pages may hold a stale sequence's KV beyond ``pos``; the kv_len mask
+    keeps the overwrite-before-read guarantee of the contiguous layout.
+    """
+    B = x.shape[0]
+    ps = pool_k.shape[1]
+    pos = jnp.asarray(pos, jnp.int32)
+    q, k, v = _project_qkv(p, cfg, x)
+    if rope:
+        rp = pos if rope_pos is None else rope_pos
+        posv = jnp.reshape(rp, (B, 1))
+        sections = cfg.mrope_sections if cfg.mrope else None
+        if sections is not None:
+            posv = jnp.broadcast_to(posv, (3, B, 1))
+        q = L.apply_rope(q, posv, cfg.rope_theta, sections)
+        k = L.apply_rope(k, posv, cfg.rope_theta, sections)
+    page = jnp.take_along_axis(block_tables, (pos // ps)[:, None],
+                               axis=1)[:, 0]                   # (B,)
+    off = pos % ps
+    pool_k = pool_k.at[page, off].set(k[:, 0].astype(pool_k.dtype))
+    pool_v = pool_v.at[page, off].set(v[:, 0].astype(pool_v.dtype))
+    from repro.kernels import ops              # local: models stay
+    # importable without touching the Pallas toolchain at module load
+    if window == 0 and ops.on_tpu():
+        # the Pallas kernel streams pages by block-table lookup in the
+        # DMA index_map — no contiguous gather is ever materialized
+        o = ops.paged_decode_attention(q[:, 0], pool_k, pool_v,
+                                       block_tables, pos + 1)[:, None]
+    else:
+        # CPU lowering / sliding window: gather the tables back into
+        # position order and reuse the masked reference attention
+        kg = pool_k[block_tables]            # (B, max_pages, ps, Hkv, D)
+        vg = pool_v[block_tables]
+        kg = kg.reshape(B, -1, *pool_k.shape[2:])
+        vg = vg.reshape(B, -1, *pool_v.shape[2:])
+        kv_start = jnp.maximum(pos + 1 - window, 0) if window else None
+        o = chunked_attention(q, kg, vg, causal=False, kv_len=pos + 1,
+                              kv_start=kv_start)
+    out = o.reshape(B, 1, -1) @ p["w_o"]
+    return out, pool_k, pool_v
+
+
 # --------------------------------------------------------------------------
 # MLA forward (expanded for train/prefill, absorbed for decode)
 # --------------------------------------------------------------------------
@@ -351,25 +419,67 @@ def mla_decode(p: dict, cfg: ModelConfig, x, cache_ckv, cache_krope, pos):
         cache_ckv = jax.lax.dynamic_update_slice(cache_ckv, ckv, (0, pos, 0))
         cache_krope = jax.lax.dynamic_update_slice(cache_krope, k_rope,
                                                    (0, pos, 0))
+    kv_pos = jnp.arange(cache_ckv.shape[1])
+    if per_slot:
+        valid = kv_pos[None, :] <= pos[:, None]          # (B, S)
+    else:
+        valid = jnp.broadcast_to(kv_pos[None, :] <= pos,
+                                 (B, cache_ckv.shape[1]))
+    out = _mla_absorbed_attend(p, cfg, q_nope, q_rope, cache_ckv,
+                               cache_krope, valid).astype(x.dtype)
+    return out @ p["w_o"], cache_ckv, cache_krope
+
+
+def _mla_absorbed_attend(p, cfg, q_nope, q_rope, ckv_seq, krope_seq, valid):
+    """Absorbed MLA attention core.  q_nope/q_rope: (B,1,H,*);
+    ckv_seq: (B,S,r); krope_seq: (B,S,rope_d); valid: (B,S) bool.
+    Returns the flattened per-head context (B, 1, H*v_head_dim) in f32
+    (the caller applies w_o)."""
+    m = cfg.mla
+    H = cfg.n_heads
+    B = q_nope.shape[0]
     # absorb w_uk into q: (B,1,H,nope) x (lora,H,nope) -> (B,1,H,lora)
     w_uk = p["w_uk"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
     q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope.astype(jnp.float32),
                        w_uk.astype(jnp.float32))
     scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
     s_lat = jnp.einsum("bqhr,bkr->bhqk", q_lat,
-                       cache_ckv.astype(jnp.float32))
+                       ckv_seq.astype(jnp.float32))
     s_rope = jnp.einsum("bqhd,bkd->bhqk", q_rope.astype(jnp.float32),
-                        cache_krope.astype(jnp.float32))
+                        krope_seq.astype(jnp.float32))
     s = (s_lat + s_rope) * scale
-    kv_pos = jnp.arange(cache_ckv.shape[1])
-    if per_slot:
-        valid = kv_pos[None, :] <= pos[:, None]          # (B, S)
-        s = jnp.where(valid[:, None, None, :], s, NEG_INF)
-    else:
-        s = jnp.where(kv_pos[None, None, None, :] <= pos, s, NEG_INF)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     prob = jax.nn.softmax(s, axis=-1)
-    ctx = jnp.einsum("bhqk,bkr->bqhr", prob, cache_ckv.astype(jnp.float32))
+    ctx = jnp.einsum("bhqk,bkr->bqhr", prob, ckv_seq.astype(jnp.float32))
     w_uv = p["w_uv"].reshape(m.kv_lora_rank, H, m.v_head_dim)
     o = jnp.einsum("bqhr,rhd->bqhd", ctx, w_uv.astype(jnp.float32))
-    out = o.astype(x.dtype).reshape(B, 1, -1) @ p["w_o"]
-    return out, cache_ckv, cache_krope
+    return o.reshape(B, 1, -1)
+
+
+def mla_paged_decode(p: dict, cfg: ModelConfig, x, pool_ckv, pool_krope,
+                     pos, block_tables):
+    """Absorbed MLA decode against a paged latent cache.
+
+    pool_ckv: (n_pages, page_size, kv_lora_rank); pool_krope:
+    (n_pages, page_size, qk_rope_head_dim).  pos: (B,) absolute write
+    positions; block_tables: (B, max_pages) int32 (see
+    ``paged_attention_decode`` for the page layout and the
+    overwrite-before-read argument)."""
+    B = x.shape[0]
+    ps = pool_ckv.shape[1]
+    pos = jnp.asarray(pos, jnp.int32)
+    posv = jnp.reshape(pos, (B, 1))
+    q_nope, q_rope, ckv, k_rope = _mla_qkv(p, cfg, x, posv)
+    page = jnp.take_along_axis(block_tables, (pos // ps)[:, None],
+                               axis=1)[:, 0]
+    off = pos % ps
+    pool_ckv = pool_ckv.at[page, off].set(ckv[:, 0].astype(pool_ckv.dtype))
+    pool_krope = pool_krope.at[page, off].set(
+        k_rope[:, 0].astype(pool_krope.dtype))
+    ckv_seq = pool_ckv[block_tables].reshape(B, -1, pool_ckv.shape[-1])
+    krope_seq = pool_krope[block_tables].reshape(B, -1, pool_krope.shape[-1])
+    kv_pos = jnp.arange(ckv_seq.shape[1])
+    valid = kv_pos[None, :] <= pos[:, None]
+    out = _mla_absorbed_attend(p, cfg, q_nope, q_rope, ckv_seq,
+                               krope_seq, valid).astype(x.dtype)
+    return out @ p["w_o"], pool_ckv, pool_krope

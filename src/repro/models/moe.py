@@ -28,6 +28,11 @@ from repro.models.pspec import shard
 CAPACITY_FACTOR = 1.25
 
 
+def _ceil4(x: int) -> int:
+    """Expert capacities round up to a multiple of 4 (min 4)."""
+    return max(4, -(-int(x) // 4) * 4)
+
+
 def init_moe(key, cfg: ModelConfig) -> dict:
     m = cfg.moe
     dt = L.dtype_of(cfg.param_dtype)
@@ -63,7 +68,18 @@ def _route(p, cfg, x2d):
 def _capacity(cfg, tokens_per_group: int) -> int:
     m = cfg.moe
     c = int(tokens_per_group * m.experts_per_token * CAPACITY_FACTOR / m.n_experts)
-    return max(4, -(-c // 4) * 4)          # round up to a multiple of 4
+    return _ceil4(c)
+
+
+def initial_capacity(cfg: ModelConfig, n_tokens: int,
+                     factor: float = 2.0) -> int:
+    """First guess for the dynamic drop-free serving-prefill capacity:
+    ``factor`` x the mean per-expert load (``T*k/E``), rounded up to a
+    multiple of 4 — the engines double it on overflow, so this only
+    sets where the (few) compiled capacity buckets start."""
+    m = cfg.moe
+    mean = n_tokens * m.experts_per_token / m.n_experts
+    return min(_ceil4(mean * factor), n_tokens)
 
 
 def _expert_ffn(p, xe):
@@ -75,8 +91,8 @@ def _expert_ffn(p, xe):
 
 
 def moe_fwd(p: dict, cfg: ModelConfig, x, *, dispatch: str = "einsum",
-            group_size: int = 2048,
-            drop_free: bool = False) -> Tuple[jax.Array, jax.Array]:
+            group_size: int = 2048, drop_free: bool = False,
+            capacity=None) -> Tuple[jax.Array, jax.Array]:
     """x: (B, S, d).  Returns (y, aux_loss).
 
     drop_free: size expert capacity so NO token is ever dropped.  The
@@ -84,7 +100,19 @@ def moe_fwd(p: dict, cfg: ModelConfig, x, *, dispatch: str = "einsum",
     phrasing of the batch but not another changes logits, breaking
     greedy determinism and prefill+decode == full-forward equivalence.
     Training keeps the capacity-bounded (dropping) GShard behavior for
-    throughput."""
+    throughput.
+
+    capacity: optional static bound on drop-free expert capacity.  The
+    static drop-free worst case (``C = G``: every token routed to ONE
+    expert) inflates the dispatch tensors ~``E/k``x over the typical
+    load; serving prefill instead passes a small per-batch bound and
+    RETRIES with a larger one if it overflowed.  When set (drop_free
+    only), the returned aux is the number of overflowed routings as
+    float32 — 0.0 means no token was dropped and the result is
+    token-exact with the unbounded path (zero-padded expert slots
+    contribute exact zeros, so shrinking C does not change the math);
+    nonzero means the caller must re-run with a larger bound before
+    trusting the logits."""
     m = cfg.moe
     B, S, d = x.shape
     T = B * S
@@ -105,15 +133,24 @@ def moe_fwd(p: dict, cfg: ModelConfig, x, *, dispatch: str = "einsum",
         G = T
     n = T // G
     # worst case every token routes to ONE expert: C = G slots suffice
-    C = max(4, -(-G // 4) * 4) if drop_free else _capacity(cfg, G)
+    C_exact = _ceil4(G)
+    if drop_free:
+        C = C_exact if capacity is None else min(_ceil4(capacity), C_exact)
+    else:
+        C = _capacity(cfg, G)
     xg = x2d.reshape(n, G, d)
     eg = top_e.reshape(n, G, m.experts_per_token)
     pg = top_p.reshape(n, G, m.experts_per_token)
+    pos = _slot_positions(eg, m.n_experts)
+    if drop_free and capacity is not None:
+        # overflow channel replaces the balance loss (serving never
+        # trains): number of routings past the capacity bound
+        aux = jnp.sum(pos >= C).astype(jnp.float32)
 
     if dispatch == "einsum":
-        y = _dispatch_einsum(p, cfg, xg, eg, pg, C)
+        y = _dispatch_einsum(p, cfg, xg, eg, pg, pos, C)
     elif dispatch == "scatter":
-        y = _dispatch_scatter(p, cfg, xg, eg, pg, C)
+        y = _dispatch_scatter(p, cfg, xg, eg, pg, pos, C)
     else:
         raise ValueError(dispatch)
     y = y.reshape(B, S, d)
@@ -134,11 +171,11 @@ def _slot_positions(eg, n_experts):
     return pos.reshape(n, G, k)
 
 
-def _dispatch_einsum(p, cfg, xg, eg, pg, C):
-    """GShard one-hot dispatch.  xg: (n, G, d)."""
+def _dispatch_einsum(p, cfg, xg, eg, pg, pos, C):
+    """GShard one-hot dispatch.  xg: (n, G, d); pos: (n, G, k) expert
+    slot of each routing (from ``_slot_positions``)."""
     m = cfg.moe
     n, G, d = xg.shape
-    pos = _slot_positions(eg, m.n_experts)                     # (n, G, k)
     keep = pos < C
     e_oh = jax.nn.one_hot(eg, m.n_experts, dtype=xg.dtype)     # (n,G,k,E)
     c_oh = jax.nn.one_hot(pos, C, dtype=xg.dtype)              # (n,G,k,C)
@@ -156,12 +193,12 @@ def _dispatch_einsum(p, cfg, xg, eg, pg, C):
     return jnp.einsum("ngec,necd->ngd", comb, he)
 
 
-def _dispatch_scatter(p, cfg, xg, eg, pg, C):
-    """Scatter/gather dispatch: zero matmul FLOPs in routing."""
+def _dispatch_scatter(p, cfg, xg, eg, pg, pos, C):
+    """Scatter/gather dispatch: zero matmul FLOPs in routing.
+    pos: (n, G, k) expert slot of each routing."""
     m = cfg.moe
     n, G, d = xg.shape
     k = m.experts_per_token
-    pos = _slot_positions(eg, m.n_experts)                     # (n, G, k)
     keep = pos < C
     # flat slot id per routing decision; dropped tokens go to a trash row
     slot = eg * C + jnp.clip(pos, 0, C - 1)                    # (n, G, k)

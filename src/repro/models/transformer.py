@@ -62,7 +62,8 @@ def _init_attn_block(key, cfg: ModelConfig, use_moe: bool,
 
 def _attn_block_fwd(p, cfg, x, positions, *, causal=True, window=0,
                     mode="flash", moe_dispatch="einsum", moe_drop_free=False,
-                    rope=True, enc_out=None, return_kv=False, x_extra=None):
+                    moe_capacity=None, rope=True, enc_out=None,
+                    return_kv=False, x_extra=None):
     """Pre-norm residual block.  Returns (x, aux, kv or None)."""
     eps = cfg.norm_eps
     if x_extra is not None:                    # zamba2 shared block: concat
@@ -93,7 +94,7 @@ def _attn_block_fwd(p, cfg, x, positions, *, causal=True, window=0,
     h = L.norm(p["ln2"], x, eps)
     if "moe" in p:
         y, aux = M.moe_fwd(p["moe"], cfg, h, dispatch=moe_dispatch,
-                           drop_free=moe_drop_free)
+                           drop_free=moe_drop_free, capacity=moe_capacity)
     elif "b_up" in p.get("mlp", {}):
         y = L.gelu_mlp(p["mlp"], h)
     else:
@@ -102,22 +103,35 @@ def _attn_block_fwd(p, cfg, x, positions, *, causal=True, window=0,
 
 
 def _attn_block_decode(p, cfg, x, cache, pos, *, window=0, x_extra=None,
-                       rope=True, rope_pos=None):
-    """Decode step for an attention block.  cache: dict with k/v or MLA."""
+                       rope=True, rope_pos=None, block_tables=None):
+    """Decode step for an attention block.  cache: dict with k/v or MLA
+    leaves — per-slot rows when ``block_tables`` is None, else the
+    layer's slice of the paged pool, indexed through the tables."""
     eps = cfg.norm_eps
     if x_extra is not None:
         h_in = L.norm(p["ln1"], jnp.concatenate([x, x_extra], axis=-1), eps)
     else:
         h_in = L.norm(p["ln1"], x, eps)
     if cfg.mla is not None:
-        a, ckv, krope = A.mla_decode(p["attn"], cfg, h_in,
-                                     cache["ckv"], cache["krope"], pos)
+        if block_tables is not None:
+            a, ckv, krope = A.mla_paged_decode(p["attn"], cfg, h_in,
+                                               cache["ckv"], cache["krope"],
+                                               pos, block_tables)
+        else:
+            a, ckv, krope = A.mla_decode(p["attn"], cfg, h_in,
+                                         cache["ckv"], cache["krope"], pos)
         new_cache = {"ckv": ckv, "krope": krope}
     else:
-        a, k, v = A.attention_decode(p["attn"], cfg, h_in,
-                                     cache["k"], cache["v"], pos,
-                                     window=window, rope=rope,
-                                     rope_pos=rope_pos)
+        if block_tables is not None:
+            a, k, v = A.paged_attention_decode(p["attn"], cfg, h_in,
+                                               cache["k"], cache["v"], pos,
+                                               block_tables, window=window,
+                                               rope=rope, rope_pos=rope_pos)
+        else:
+            a, k, v = A.attention_decode(p["attn"], cfg, h_in,
+                                         cache["k"], cache["v"], pos,
+                                         window=window, rope=rope,
+                                         rope_pos=rope_pos)
         new_cache = {"k": k, "v": v}
     x = x + a
     if "xattn" in p:                           # whisper: static cross cache
@@ -291,7 +305,7 @@ def mrope_positions(cfg: ModelConfig, B: int, n_patches: int, s_text: int,
 
 def forward(params: dict, cfg: ModelConfig, batch: dict, *,
             mode: str = "flash", moe_dispatch: str = "einsum",
-            moe_drop_free: bool = False, window: int = 0,
+            moe_drop_free: bool = False, moe_capacity=None, window: int = 0,
             return_cache: bool = False, return_hidden: bool = False,
             remat: bool = True):
     """Returns (logits, aux_loss[, cache][, hidden]).
@@ -299,7 +313,12 @@ def forward(params: dict, cfg: ModelConfig, batch: dict, *,
     moe_drop_free: route MoE tokens with drop-free expert capacity —
     REQUIRED on serving forwards (prefill, reference logits compared
     against decode) so results are batch-composition independent; leave
-    False for training (capacity-bounded GShard throughput)."""
+    False for training (capacity-bounded GShard throughput).
+    moe_capacity: optional static per-batch expert-capacity bound for
+    drop-free serving prefill — when set, aux_loss reports the number of
+    OVERFLOWED routings instead of the balance loss (0.0 == the result
+    is token-exact with the unbounded drop-free path; the engines retry
+    with a larger bound otherwise).  See ``moe.moe_fwd``."""
     window = window or cfg.sliding_window
     fam = cfg.family
     if fam == "audio":
@@ -347,7 +366,7 @@ def forward(params: dict, cfg: ModelConfig, batch: dict, *,
         fn = lambda xc, lp: _attn_block_fwd(
             lp, cfg, xc, positions, window=window, mode=mode,
             moe_dispatch=moe_dispatch, moe_drop_free=moe_drop_free,
-            return_kv=return_cache)
+            moe_capacity=moe_capacity, return_kv=return_cache)
         x, aux_total, kvs = run_stack(x, aux_total, params["blocks_moe"], fn)
         if return_cache:
             cache["blocks_moe"] = _kv_cache_entry(cfg, kvs)
@@ -660,14 +679,91 @@ def graft_slot_cache(cache: dict, prefix_cache: dict, slot) -> dict:
     return jax.tree.map(graft, cache, prefix_cache)
 
 
+# --------------------------------------------------------------------------
+# paged KV cache (dense / moe attention families)
+# --------------------------------------------------------------------------
+
+def _paged_attn_cache_struct(cfg, n_layers, n_pages, page_size, dtype):
+    hd = cfg.resolved_head_dim
+    if cfg.mla is not None:
+        m = cfg.mla
+        return {
+            "ckv": jnp.zeros((n_layers, n_pages, page_size, m.kv_lora_rank),
+                             dtype),
+            "krope": jnp.zeros((n_layers, n_pages, page_size,
+                                m.qk_rope_head_dim), dtype),
+        }
+    return {
+        "k": jnp.zeros((n_layers, n_pages, page_size, cfg.n_kv_heads, hd),
+                       dtype),
+        "v": jnp.zeros((n_layers, n_pages, page_size, cfg.n_kv_heads, hd),
+                       dtype),
+    }
+
+
+def init_paged_cache(cfg: ModelConfig, n_pages: int, page_size: int) -> dict:
+    """Zero-initialized paged KV pool: pages replace the per-slot
+    ``(B, max_seq)`` reservation of ``init_cache``; which sequence owns
+    which page lives in the engine's block tables.  Attention-cached
+    families only — recurrent state (hybrid/ssm) is fixed-size per slot
+    and keeps the contiguous layout.  Sliding-window archs store full
+    absolute positions per page (the window is enforced by masking, not
+    by a ring buffer)."""
+    dt = L.dtype_of(cfg.activation_dtype)
+    fam = cfg.family
+    if fam == "dense":
+        return {"blocks": _paged_attn_cache_struct(
+            cfg, cfg.n_layers, n_pages, page_size, dt)}
+    if fam == "moe":
+        m = cfg.moe
+        c = {}
+        if m.n_dense_layers:
+            c["blocks_dense"] = _paged_attn_cache_struct(
+                cfg, m.n_dense_layers, n_pages, page_size, dt)
+        c["blocks_moe"] = _paged_attn_cache_struct(
+            cfg, cfg.n_layers - m.n_dense_layers, n_pages, page_size, dt)
+        return c
+    raise NotImplementedError(
+        f"paged KV cache unsupported for family {cfg.family!r} "
+        "(recurrent families keep their fixed-size state path)")
+
+
+def graft_paged_cache(cache: dict, prefix_cache: dict, page_ids) -> dict:
+    """Scatter a single-sequence prefix cache (leaves (L, 1, S_b, ...))
+    into pages ``page_ids`` ((n0,) int32) of the paged pool.  The prefix
+    is padded/clamped to ``n0 * page_size`` positions, so every written
+    page is fully overwritten — positions beyond the true prompt length
+    hold prefill padding garbage and stay masked by the per-slot
+    ``kv_len`` exactly as in the contiguous layout."""
+    def graft(pool, small):
+        ps = pool.shape[2]
+        n0 = page_ids.shape[0]
+        need = n0 * ps
+        sm = small[:, 0]                          # (L, S_b, ...)
+        Sb = sm.shape[1]
+        if Sb < need:
+            pad = [(0, 0)] * sm.ndim
+            pad[1] = (0, need - Sb)
+            sm = jnp.pad(sm, pad)
+        else:
+            sm = sm[:, :need]
+        sm = sm.reshape(sm.shape[0], n0, ps, *sm.shape[2:])
+        return pool.at[:, page_ids].set(sm.astype(pool.dtype))
+    return jax.tree.map(graft, cache, prefix_cache)
+
+
 def decode_step(params: dict, cfg: ModelConfig, cache: dict,
-                tokens: jax.Array, pos) -> Tuple[jax.Array, dict]:
+                tokens: jax.Array, pos,
+                block_tables=None) -> Tuple[jax.Array, dict]:
     """One decode step.  tokens: (B, 1) int32.  pos is either a scalar
     int32 (all sequences at the same absolute position — the fixed-slot
     engine) or a (B,) vector of per-sequence positions (continuous
     batching: each cache slot is at its own depth; cache writes and
-    attention masks are resolved per slot).  Returns
-    (logits (B,1,V), new_cache)."""
+    attention masks are resolved per slot).  block_tables: optional
+    (B, max_pages) int32 per-slot page ids (scratch page 0 for inactive
+    slots / unused entries) — when given, cache leaves are
+    ``init_paged_cache`` pools and reads/writes go through the tables
+    (dense/moe only).  Returns (logits (B,1,V), new_cache)."""
     fam = cfg.family
     window = cfg.sliding_window
     per_slot = jnp.asarray(pos).ndim == 1
@@ -675,6 +771,10 @@ def decode_step(params: dict, cfg: ModelConfig, cache: dict,
         raise NotImplementedError(
             "per-slot decode positions unsupported for encoder-decoder "
             "audio (learned positions are looked up with a scalar index)")
+    if block_tables is not None and fam not in ("dense", "moe"):
+        raise NotImplementedError(
+            f"paged decode unsupported for family {cfg.family!r} "
+            "(recurrent families keep their fixed-size state path)")
     x = L.embed(params["embed"], tokens)
     rope = fam != "audio"
     rope_pos = None
@@ -691,7 +791,8 @@ def decode_step(params: dict, cfg: ModelConfig, cache: dict,
         def body(xc, inp):
             lp, lc = inp
             xn, nc = _attn_block_decode(lp, cfg, xc, lc, pos, window=window,
-                                        rope=rope, rope_pos=rope_pos)
+                                        rope=rope, rope_pos=rope_pos,
+                                        block_tables=block_tables)
             return xn, nc
         return jax.lax.scan(body, x, (stack_params, stack_cache))
 
@@ -764,10 +865,11 @@ def _xlstm_decode(params, cfg, x, cache):
 # ==========================================================================
 
 def prefill(params, cfg: ModelConfig, batch: dict, *, mode="flash",
-            moe_dispatch: str = "einsum"):
+            moe_dispatch: str = "einsum", moe_capacity=None):
     """Run the full prompt, returning (last-position logits, cache)."""
     logits, aux, cache = forward(params, cfg, batch, mode=mode,
                                  moe_dispatch=moe_dispatch,
                                  moe_drop_free=True,
+                                 moe_capacity=moe_capacity,
                                  return_cache=True, remat=False)
     return logits[:, -1:], cache

@@ -9,7 +9,10 @@ Two admission disciplines feed the engines in ``serving.engine``:
     at a time into whichever KV-cache slot frees up, so arrivals join
     mid-flight.  ``RequestQueue`` stays the single admission point; a
     bounded ``capacity`` gives the ground tier backpressure under the
-    heavy-traffic regime instead of unbounded memory growth.
+    heavy-traffic regime instead of unbounded memory growth.  Under the
+    paged KV layout admission is additionally gated on the page pool:
+    ``Request.pages_needed`` is the worst-case lifetime page count the
+    engine reserves up front.
 """
 from __future__ import annotations
 
@@ -33,6 +36,19 @@ class Request:
     max_new: int = 16
     rid: int = field(default_factory=lambda: next(_ids))
     arrival_t: float = 0.0                # engine-clock steps
+
+    def pages_needed(self, page_size: int) -> int:
+        """Worst-case KV pages over the request's lifetime: the cache
+        holds positions [0, prompt + max_new - 1) (the final emitted
+        token is never written back)."""
+        n_positions = len(self.prompt) + self.max_new - 1
+        return -(-n_positions // page_size)
+
+    def clone(self) -> "Request":
+        """Fresh-rid copy for replaying the same workload through
+        another engine (benchmark/test A-B comparisons)."""
+        return Request(prompt=self.prompt.copy(), max_new=self.max_new,
+                       arrival_t=self.arrival_t)
 
 
 @dataclass

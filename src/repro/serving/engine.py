@@ -7,12 +7,27 @@ Two engines share the model's cache layout contract:
     before the next one starts.  The satellite tier serves small
     batches (latency/power bound); fine there.
   * ``ContinuousEngine`` — continuous batching for the throughput-bound
-    ground tier: a ``SlotManager`` owns one ``(n_slots, ..., max_seq,
-    ...)`` KV cache; requests are prefilled individually, grafted into
+    ground tier: requests are prefilled individually, grafted into
     whichever slot is free, and all active slots step together through
-    ONE jit-compiled ``decode_step`` with per-slot position vectors.
+    ONE jit-compiled decode step with per-slot position vectors.
     Finished sequences are evicted immediately so queued arrivals join
     mid-flight instead of waiting for a batch to drain.
+
+The continuous engine's KV memory comes in two layouts:
+
+  * ``PagedSlotManager`` (default for dense/moe): a ``BlockAllocator``
+    owns a global pool of fixed-size KV pages; each sequence holds a
+    growable block table, so memory scales with
+    ``sum_i ceil(len_i/page_size)`` instead of ``n_slots * max_seq`` and
+    admission blocks on page exhaustion rather than slot count.
+  * ``SlotManager`` (recurrent hybrid/ssm, and the memory baseline):
+    one contiguous ``(n_slots, ..., max_seq, ...)`` cache row per slot.
+
+MoE serving prefill uses a *dynamic* per-batch expert-capacity bound:
+it starts near the mean load and doubles on overflow (reported through
+the aux channel) until no routing is dropped — token-exact with the
+static drop-free worst case (``C = G``) at a fraction of the dispatch
+tensor size.
 """
 from __future__ import annotations
 
@@ -24,8 +39,27 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import ModelConfig
+from repro.models import moe as M
 from repro.models import transformer as T
 from repro.serving.batching import Request, RequestQueue
+from repro.serving.paging import (BlockAllocator, default_pool_pages,
+                                  pages_for)
+
+
+def _dynamic_capacity_prefill(prefill_fn, cfg: ModelConfig, n_tok: int):
+    """Drop-free MoE prefill under a dynamic per-batch expert-capacity
+    bound: start near the mean load and double on overflow until
+    token-exact with the unbounded drop-free path.  ``prefill_fn(cap)``
+    must return ``(logits, aux, cache)`` where aux counts overflowed
+    routings (see ``moe.moe_fwd``); ``cap >= n_tok`` forces the exact
+    drop-free worst case in ``moe_fwd``, so the loop always terminates
+    with an exact result."""
+    cap = M.initial_capacity(cfg, n_tok)
+    while True:
+        logits, aux, cache = prefill_fn(cap)
+        if cap >= n_tok or float(aux) == 0.0:
+            return logits, cache
+        cap = min(cap * 2, n_tok)
 
 
 def _graft(template: jax.Array, got: jax.Array) -> jax.Array:
@@ -54,8 +88,20 @@ class ServingEngine:
         self.max_seq = max_seq
         self._prefill = jax.jit(
             lambda p, b: T.prefill(p, cfg, b))
+        self._prefill_cap = jax.jit(
+            lambda p, b, cap: T.forward(p, cfg, b, moe_drop_free=True,
+                                        moe_capacity=cap, return_cache=True,
+                                        remat=False),
+            static_argnums=(2,))
         self._decode = jax.jit(
             lambda p, c, t, pos: T.decode_step(p, cfg, c, t, pos))
+
+    def _moe_prefill(self, batch):
+        n_tok = int(np.prod(batch["tokens"].shape))
+        logits, cache = _dynamic_capacity_prefill(
+            lambda cap: self._prefill_cap(self.params, batch, cap),
+            self.cfg, n_tok)
+        return logits[:, -1:], cache
 
     @classmethod
     def init(cls, cfg: ModelConfig, seed: int = 0, max_seq: int = 2048):
@@ -76,7 +122,10 @@ class ServingEngine:
         batch = {"tokens": jnp.asarray(tokens, jnp.int32)}
         if extra_inputs:
             batch.update({k: jnp.asarray(v) for k, v in extra_inputs.items()})
-        logits, cache = self._prefill(self.params, batch)
+        if cfg.moe is not None:
+            logits, cache = self._moe_prefill(batch)
+        else:
+            logits, cache = self._prefill(self.params, batch)
         cache = self.full_cache(cache, B)
         prompt_logits = np.asarray(logits[:, -1], np.float32)
 
@@ -125,8 +174,45 @@ class _SlotState:
     admitted_step: int = 0
 
 
-class SlotManager:
-    """Owns the multi-slot KV cache and per-slot occupancy.
+class _SlotOccupancy:
+    """Shared slot-occupancy bookkeeping for both cache layouts."""
+
+    # -- occupancy ---------------------------------------------------------
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.states) if s is None]
+
+    def active_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.states) if s is not None]
+
+    def any_active(self) -> bool:
+        return any(s is not None for s in self.states)
+
+    # -- batched decode inputs --------------------------------------------
+    def decode_inputs(self):
+        """(tokens (n_slots, 1) int32, pos (n_slots,) int32).  Inactive
+        slots feed a dummy token at position 0 of a cache region no live
+        sequence reads (their own private cache row here; the scratch
+        page in the paged layout), leaving live garbage there.  That is
+        safe ONLY because admission rewrites positions [0, prefix)
+        before the slot is read again and everything past a slot's
+        ``kv_len`` is masked — any layout must preserve this
+        overwrite-before-read guarantee."""
+        toks = np.zeros((self.n_slots, 1), np.int32)
+        pos = np.zeros((self.n_slots,), np.int32)
+        for i, s in enumerate(self.states):
+            if s is not None:
+                toks[i, 0] = s.next_tok
+                pos[i] = s.pos
+        return toks, pos
+
+    def kv_cache_stats(self) -> dict:
+        leaves = jax.tree.leaves(self.cache)
+        return {"kv_cache_bytes": int(sum(
+            l.size * jnp.dtype(l.dtype).itemsize for l in leaves))}
+
+
+class SlotManager(_SlotOccupancy):
+    """Owns the contiguous multi-slot KV cache.
 
     The cache is ``models.transformer.init_cache(cfg, n_slots, max_seq)``
     — slot ``i`` is batch row ``i`` of every leaf.  Admission grafts a
@@ -143,17 +229,10 @@ class SlotManager:
         self.states: List[Optional[_SlotState]] = [None] * n_slots
         self._graft = jax.jit(T.graft_slot_cache)
 
-    # -- occupancy ---------------------------------------------------------
-    def free_slots(self) -> List[int]:
-        return [i for i, s in enumerate(self.states) if s is None]
+    # -- admission / eviction ----------------------------------------------
+    def can_admit(self, req: Request) -> bool:
+        return True                    # a free slot is the only resource
 
-    def active_slots(self) -> List[int]:
-        return [i for i, s in enumerate(self.states) if s is not None]
-
-    def any_active(self) -> bool:
-        return any(s is not None for s in self.states)
-
-    # -- admission / eviction ---------------------------------------------
     def place(self, slot: int, prefix_cache, state: _SlotState) -> None:
         assert self.states[slot] is None, f"slot {slot} occupied"
         self.cache = self._graft(self.cache, prefix_cache, jnp.int32(slot))
@@ -162,21 +241,107 @@ class SlotManager:
     def evict(self, slot: int) -> None:
         self.states[slot] = None
 
-    # -- batched decode inputs --------------------------------------------
-    def decode_inputs(self):
-        """(tokens (n_slots, 1) int32, pos (n_slots,) int32).  Inactive
-        slots feed a dummy token at position 0 of their own (private)
-        cache row, leaving live garbage there.  That is safe ONLY because
-        ``place``'s graft rewrites positions [0, prefix) before the slot
-        is read again — any future layout change (e.g. paged KV) must
-        preserve an equivalent overwrite-before-read guarantee."""
-        toks = np.zeros((self.n_slots, 1), np.int32)
-        pos = np.zeros((self.n_slots,), np.int32)
-        for i, s in enumerate(self.states):
-            if s is not None:
-                toks[i, 0] = s.next_tok
-                pos[i] = s.pos
-        return toks, pos
+    def kv_cache_stats(self) -> dict:
+        return {"kv_layout": "contiguous", **super().kv_cache_stats()}
+
+
+@dataclass
+class _PagedSlotState(_SlotState):
+    pages: List[int] = field(default_factory=list)   # block table
+    budget: int = 0                    # lifetime pages reserved
+
+
+class PagedSlotManager(_SlotOccupancy):
+    """Owns the paged KV pool and per-slot block tables.
+
+    The cache is ``models.transformer.init_paged_cache(cfg, n_pages + 1,
+    page_size)`` — page 0 is the scratch page inactive slots write to.
+    Admission reserves a request's worst-case lifetime page count
+    (``ceil((prompt + max_new - 1)/page_size)``) so decode can never
+    stall mid-sequence, scatters the prefix cache into freshly
+    allocated prompt pages, and grows the block table one page per
+    ``page_size`` decode steps; eviction returns pages plus any unused
+    reservation to the free list.  Stale KV in recycled pages beyond a
+    slot's ``kv_len`` stays masked until overwritten — the same
+    overwrite-before-read guarantee as the contiguous layout.
+    """
+
+    def __init__(self, cfg: ModelConfig, n_slots: int, max_seq: int, *,
+                 page_size: int = 16, pool_pages: Optional[int] = None):
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.page_size = page_size
+        if pool_pages is None:
+            pool_pages = default_pool_pages(n_slots, max_seq, page_size)
+        self.allocator = BlockAllocator(pool_pages)
+        self.max_bt = pages_for(max_seq, page_size)
+        self.cache = T.init_paged_cache(cfg, pool_pages + 1, page_size)
+        self.states: List[Optional[_PagedSlotState]] = [None] * n_slots
+        self._graft = jax.jit(T.graft_paged_cache)
+
+    def _lifetime_pages(self, req: Request) -> int:
+        return req.pages_needed(self.page_size)
+
+    # -- admission / eviction ----------------------------------------------
+    def can_admit(self, req: Request) -> bool:
+        return self.allocator.can_reserve(self._lifetime_pages(req))
+
+    def fits_pool(self, req: Request) -> bool:
+        """Whether the request could EVER be admitted (pool capacity)."""
+        return self._lifetime_pages(req) <= self.allocator.n_pages
+
+    def place(self, slot: int, prefix_cache, state: _SlotState) -> None:
+        assert self.states[slot] is None, f"slot {slot} occupied"
+        req = state.request
+        budget = self._lifetime_pages(req)
+        self.allocator.reserve(budget)
+        pages = self.allocator.alloc(
+            pages_for(len(req.prompt), self.page_size))
+        self.cache = self._graft(self.cache, prefix_cache,
+                                 jnp.asarray(pages, jnp.int32))
+        self.states[slot] = _PagedSlotState(
+            request=req, pos=state.pos, next_tok=state.next_tok,
+            emitted=state.emitted, admitted_step=state.admitted_step,
+            pages=pages, budget=budget)
+
+    def evict(self, slot: int) -> None:
+        st = self.states[slot]
+        self.allocator.release(st.pages,
+                               unreserve=st.budget - len(st.pages))
+        self.states[slot] = None
+
+    # -- paged decode plumbing ---------------------------------------------
+    def ensure_write_pages(self) -> None:
+        """Grow each active slot's block table to cover its next write
+        position.  Draws on the reservation made at admission, so it
+        cannot fail mid-sequence."""
+        for st in self.states:
+            if st is None:
+                continue
+            while len(st.pages) <= st.pos // self.page_size:
+                st.pages.extend(self.allocator.alloc(1))
+
+    def block_tables(self) -> np.ndarray:
+        """(n_slots, max_bt) int32 page ids; unused entries point at
+        the scratch page 0."""
+        bt = np.zeros((self.n_slots, self.max_bt), np.int32)
+        for i, st in enumerate(self.states):
+            if st is not None:
+                bt[i, :len(st.pages)] = st.pages
+        return bt
+
+    def kv_cache_stats(self) -> dict:
+        a = self.allocator
+        return {
+            "kv_layout": "paged",
+            "page_size": self.page_size,
+            "pool_pages": a.n_pages,
+            "peak_pages_in_use": a.peak_in_use,
+            "peak_pages_committed": a.peak_committed,
+            "page_pool_utilization": round(a.utilization(), 4),
+            **super().kv_cache_stats(),
+        }
 
 
 class ContinuousEngine:
@@ -192,30 +357,56 @@ class ContinuousEngine:
     positions invisible.  Recurrent families (hybrid/ssm) prefill at the
     exact prompt length — their prefix state integrates every input
     position, so padding would change it.
+
+    kv_layout: "paged" (default for dense/moe via "auto") pools KV in
+    fixed-size pages with per-sequence block tables — admission then
+    blocks on page-pool exhaustion instead of slot count; "contiguous"
+    reserves a full max_seq row per slot (always used for the
+    fixed-size recurrent state of hybrid/ssm).  page_size / pool_pages
+    are the paged pool's sizing knobs (pool_pages defaults to 75% of
+    the contiguous layout's positions; see ``paging.default_pool_pages``).
     """
 
     FAMILIES = ("dense", "moe", "hybrid", "ssm")
+    PAGED_FAMILIES = ("dense", "moe")
 
     def __init__(self, cfg: ModelConfig, params, *, n_slots: int = 4,
-                 max_seq: int = 2048, queue_capacity: Optional[int] = None):
+                 max_seq: int = 2048, queue_capacity: Optional[int] = None,
+                 kv_layout: str = "auto", page_size: int = 16,
+                 pool_pages: Optional[int] = None):
         if cfg.family not in self.FAMILIES:
             raise NotImplementedError(
                 f"ContinuousEngine does not serve family {cfg.family!r}")
+        if kv_layout not in ("auto", "paged", "contiguous"):
+            raise ValueError(f"unknown kv_layout {kv_layout!r}")
+        if kv_layout == "auto":
+            kv_layout = ("paged" if cfg.family in self.PAGED_FAMILIES
+                         else "contiguous")
         self.cfg = cfg
         self.params = params
         self.max_seq = max_seq
-        self.slots = SlotManager(cfg, n_slots, max_seq)
+        self.kv_layout = kv_layout
+        if kv_layout == "paged":
+            self.slots = PagedSlotManager(cfg, n_slots, max_seq,
+                                          page_size=page_size,
+                                          pool_pages=pool_pages)
+            self._decode = jax.jit(
+                lambda p, c, t, pos, bt: T.decode_step(
+                    p, cfg, c, t, pos, block_tables=bt))
+        else:
+            self.slots = SlotManager(cfg, n_slots, max_seq)
+            self._decode = jax.jit(
+                lambda p, c, t, pos: T.decode_step(p, cfg, c, t, pos))
         self.queue = RequestQueue(max_batch=n_slots,
                                   capacity=queue_capacity)
         self.clock = 0                        # decode-step ticks
         self.finish_order: List[int] = []
         self.results: Dict[int, RequestResult] = {}
         self._prefill = jax.jit(
-            lambda p, t: T.forward(p, cfg, {"tokens": t},
-                                   moe_drop_free=True,
-                                   return_cache=True, remat=False))
-        self._decode = jax.jit(
-            lambda p, c, t, pos: T.decode_step(p, cfg, c, t, pos))
+            lambda p, t, cap: T.forward(p, cfg, {"tokens": t},
+                                        moe_drop_free=True, moe_capacity=cap,
+                                        return_cache=True, remat=False),
+            static_argnums=(2,))
 
     @classmethod
     def init(cls, cfg: ModelConfig, seed: int = 0, **kw):
@@ -233,6 +424,11 @@ class ContinuousEngine:
             raise ValueError(
                 f"request {req.rid}: prompt {len(req.prompt)} + max_new "
                 f"{req.max_new} exceeds max_seq {self.max_seq}")
+        if self.kv_layout == "paged" and not self.slots.fits_pool(req):
+            raise ValueError(
+                f"request {req.rid}: needs more KV pages than the whole "
+                f"pool ({self.slots.allocator.n_pages} x "
+                f"{self.slots.page_size}) — raise pool_pages")
         return self.queue.submit(req)
 
     def _bucket_len(self, S: int) -> int:
@@ -243,12 +439,23 @@ class ContinuousEngine:
             b *= 2
         return min(b, self.max_seq)
 
+    def _run_prefill(self, toks: np.ndarray):
+        """Drop-free prefill; MoE archs use the dynamic per-batch
+        expert-capacity bound (``_dynamic_capacity_prefill``)."""
+        toks = jnp.asarray(toks)
+        if self.cfg.moe is None:
+            logits, _, pcache = self._prefill(self.params, toks, None)
+            return logits, pcache
+        return _dynamic_capacity_prefill(
+            lambda cap: self._prefill(self.params, toks, cap),
+            self.cfg, int(toks.size))
+
     def _admit(self, req: Request, slot: int) -> None:
         S = len(req.prompt)
         bucket = self._bucket_len(S)
         toks = np.zeros((1, bucket), np.int32)
         toks[0, :S] = req.prompt
-        logits, _, pcache = self._prefill(self.params, jnp.asarray(toks))
+        logits, pcache = self._run_prefill(toks)
         first = int(jnp.argmax(logits[0, S - 1]))
         st = _SlotState(request=req, pos=S, next_tok=first, emitted=[first],
                         admitted_step=self.clock)
@@ -270,20 +477,31 @@ class ContinuousEngine:
     def step(self) -> List[int]:
         """Admit arrived requests into free slots, run ONE batched decode
         step over all slots, evict finished sequences.  Returns the rids
-        finished during this step."""
+        finished during this step.  Paged layout: admission additionally
+        blocks (FIFO) while the page pool cannot cover the head
+        request's worst-case lifetime — eviction returns pages, so the
+        head is admitted once enough earlier sequences finish."""
         before = len(self.finish_order)
         for slot in self.slots.free_slots():
             req = self.queue.peek()
             if req is None or req.arrival_t > self.clock:
                 break
+            if not self.slots.can_admit(req):
+                break                         # page pool exhausted: wait
             self._admit(self.queue.pop(), slot)
         if not self.slots.any_active():
             self.clock += 1                   # idle tick: wait for arrivals
             return self.finish_order[before:]
         toks, pos = self.slots.decode_inputs()
-        logits, self.slots.cache = self._decode(
-            self.params, self.slots.cache, jnp.asarray(toks),
-            jnp.asarray(pos))
+        if self.kv_layout == "paged":
+            self.slots.ensure_write_pages()
+            logits, self.slots.cache = self._decode(
+                self.params, self.slots.cache, jnp.asarray(toks),
+                jnp.asarray(pos), jnp.asarray(self.slots.block_tables()))
+        else:
+            logits, self.slots.cache = self._decode(
+                self.params, self.slots.cache, jnp.asarray(toks),
+                jnp.asarray(pos))
         self.clock += 1
         nxt = np.asarray(jnp.argmax(logits[:, 0], -1))
         for slot in self.slots.active_slots():
@@ -304,3 +522,8 @@ class ContinuousEngine:
         while len(self.queue) or self.slots.any_active():
             self.step()
         return self.results
+
+    def kv_cache_stats(self) -> dict:
+        """Cache-memory accounting: total cache bytes plus, for the
+        paged layout, the page-pool sizing knobs and peak utilization."""
+        return self.slots.kv_cache_stats()

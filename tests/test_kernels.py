@@ -50,6 +50,53 @@ def test_decode_attention_kernel(B, S, H, Hkv, D, dtype, kv_len):
                                want.astype(jnp.float32), **_tol(dtype))
 
 
+@pytest.mark.parametrize("B,S,H,Hkv,D", [(2, 512, 8, 2, 64)])
+@pytest.mark.parametrize("S_odd", [100, 129, 500])
+def test_decode_attention_kernel_unaligned_cache(B, S, H, Hkv, D, S_odd):
+    """Any cache length works: S is padded up to a block_k multiple and
+    the pad positions stay masked."""
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, D))
+    k = jax.random.normal(ks[1], (B, S_odd, Hkv, D))
+    v = jax.random.normal(ks[2], (B, S_odd, Hkv, D))
+    lens = jnp.asarray([1, S_odd], jnp.int32)[:B]
+    out = ops.decode_attention(q, k, v, lens, block_k=64)
+    want = ref.decode_attention_ref(q, k, v, lens)
+    np.testing.assert_allclose(out, want, atol=2e-4, rtol=2e-4)
+
+
+@pytest.mark.parametrize("B,H,Hkv,D,ps,max_bt", [
+    (2, 4, 2, 64, 16, 4),
+    (3, 8, 1, 32, 8, 6),
+    (1, 2, 2, 128, 16, 2),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_decode_attention_kernel(B, H, Hkv, D, ps, max_bt, dtype):
+    """Interpret-mode paged kernel vs the ref.py gather reference, with
+    shuffled (non-contiguous) block tables and ragged lengths."""
+    n_pages = B * max_bt + 1                      # + scratch page 0
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, D), dtype)
+    kp = jax.random.normal(ks[1], (n_pages, ps, Hkv, D), dtype)
+    vp = jax.random.normal(ks[2], (n_pages, ps, Hkv, D), dtype)
+    rng = np.random.default_rng(0)
+    bt = jnp.asarray(rng.permutation(np.arange(1, n_pages))
+                     .reshape(B, max_bt), jnp.int32)
+    lens = jnp.asarray(rng.integers(1, max_bt * ps + 1, B), jnp.int32)
+    got = ops.paged_decode_attention(q, kp, vp, bt, lens)
+    want = ref.paged_decode_attention_ref(q, kp, vp, bt, lens)
+    np.testing.assert_allclose(got.astype(jnp.float32),
+                               want.astype(jnp.float32), **_tol(dtype))
+    # cross-check the gather reference itself against the contiguous
+    # oracle on the gathered layout
+    kg = kp[bt].reshape(B, -1, Hkv, D)
+    vg = vp[bt].reshape(B, -1, Hkv, D)
+    np.testing.assert_allclose(want.astype(jnp.float32),
+                               ref.decode_attention_ref(
+                                   q, kg, vg, lens).astype(jnp.float32),
+                               atol=1e-6, rtol=1e-6)
+
+
 @pytest.mark.parametrize("B,S,H,P,N,chunk", [
     (2, 256, 2, 32, 16, 64),
     (1, 512, 3, 64, 64, 128),

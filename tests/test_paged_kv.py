@@ -1,0 +1,245 @@
+"""Paged KV cache: allocator bookkeeping, paged-vs-contiguous engine
+equivalence (dense / moe / MLA), pool-exhaustion admission blocking,
+memory accounting, and the dynamic MoE serving-prefill capacity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import get_reduced_config
+from repro.models import moe as M
+from repro.models import transformer as T
+from repro.serving.batching import Request, poisson_trace
+from repro.serving.engine import ContinuousEngine, PagedSlotManager
+from repro.serving.paging import (BlockAllocator, PoolExhausted,
+                                  default_pool_pages, pages_for)
+
+from helpers import f32_cfg
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return f32_cfg("smollm-360m")
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return T.init_params(jax.random.PRNGKey(0), cfg, max_seq=64)
+
+
+def _clone(reqs):
+    return [r.clone() for r in reqs]
+
+
+def _paired_tokens(res_a, res_b):
+    """Results keyed by submission order (rids differ across engines)."""
+    return [(res_a[a].tokens, res_b[b].tokens)
+            for a, b in zip(sorted(res_a), sorted(res_b))]
+
+
+# ---------------------------------------------------------------------------
+# allocator
+# ---------------------------------------------------------------------------
+
+def test_block_allocator_reserve_alloc_release():
+    a = BlockAllocator(8)
+    assert a.available() == 8
+    a.reserve(5)
+    assert a.available() == 3 and a.can_reserve(3) and not a.can_reserve(4)
+    ids = a.alloc(3)
+    assert len(set(ids)) == 3 and all(1 <= i <= 8 for i in ids)
+    assert a.in_use == 3 and a.reserved == 2
+    a.release(ids, unreserve=2)            # evict before using the budget
+    assert a.in_use == 0 and a.reserved == 0 and a.available() == 8
+    assert a.peak_in_use == 3 and a.peak_committed == 5
+
+
+def test_block_allocator_guards():
+    a = BlockAllocator(2)
+    with pytest.raises(PoolExhausted):
+        a.reserve(3)
+    with pytest.raises(PoolExhausted):
+        a.alloc(1)                         # alloc without reservation
+    a.reserve(2)
+    ids = a.alloc(2)
+    assert sorted(ids) == [1, 2]           # page 0 is never handed out
+    a.release(ids)
+    with pytest.raises(PoolExhausted):
+        a.release([ids[0]])                # double release fails loudly
+    with pytest.raises(PoolExhausted):
+        a.release([0])                     # scratch page is not pooled
+
+
+def test_pages_for_and_default_pool():
+    assert pages_for(0, 16) == 0
+    assert pages_for(1, 16) == 1
+    assert pages_for(16, 16) == 1
+    assert pages_for(17, 16) == 2
+    # pool never smaller than one worst-case request
+    assert default_pool_pages(1, 16, 16) == pages_for(16, 16)
+    # and strictly below the contiguous layout at the benchmark shape
+    assert default_pool_pages(4, 64, 16) * 16 < 4 * 64
+
+
+# ---------------------------------------------------------------------------
+# paged == contiguous (token-exactness across attention families)
+# ---------------------------------------------------------------------------
+
+def test_paged_matches_contiguous_trace(cfg, params):
+    trace = poisson_trace(10, rate=0.7, prompt_lens=(3, 14), max_new=(1, 10),
+                          vocab_size=cfg.vocab_size, seed=11)
+    cont = ContinuousEngine(cfg, params, n_slots=3, max_seq=64,
+                            kv_layout="contiguous").run(_clone(trace))
+    paged = ContinuousEngine(cfg, params, n_slots=3, max_seq=64,
+                             kv_layout="paged").run(_clone(trace))
+    assert len(cont) == len(paged) == len(trace)
+    for want, got in _paired_tokens(cont, paged):
+        np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.slow   # compiles prefill+decode per arch
+@pytest.mark.parametrize("arch", [
+    "qwen3-moe-30b-a3b",    # moe routing through paged pages
+    "deepseek-v3-671b",     # MLA latent cache paged
+])
+def test_paged_matches_contiguous_all_families(arch):
+    fam_cfg = f32_cfg(arch)
+    fam_params = T.init_params(jax.random.PRNGKey(0), fam_cfg, max_seq=64)
+    rng = np.random.default_rng(6)
+    reqs = [Request(prompt=rng.integers(1, fam_cfg.vocab_size, 6)
+                    .astype(np.int32), max_new=5),
+            Request(prompt=rng.integers(1, fam_cfg.vocab_size, 9)
+                    .astype(np.int32), max_new=7, arrival_t=2.0)]
+    cont = ContinuousEngine(fam_cfg, fam_params, n_slots=2, max_seq=64,
+                            kv_layout="contiguous").run(_clone(reqs))
+    paged = ContinuousEngine(fam_cfg, fam_params, n_slots=2, max_seq=64,
+                             kv_layout="paged").run(_clone(reqs))
+    for want, got in _paired_tokens(cont, paged):
+        np.testing.assert_array_equal(got, want)
+
+
+def test_paged_is_default_for_dense(cfg, params):
+    eng = ContinuousEngine(cfg, params, n_slots=2, max_seq=64)
+    assert eng.kv_layout == "paged"
+    assert isinstance(eng.slots, PagedSlotManager)
+
+
+def test_recurrent_families_keep_contiguous_state():
+    zcfg = get_reduced_config("zamba2-7b")
+    eng = ContinuousEngine(zcfg, {}, n_slots=1, max_seq=32)
+    assert eng.kv_layout == "contiguous"
+    with pytest.raises(NotImplementedError):
+        ContinuousEngine(zcfg, {}, n_slots=1, max_seq=32, kv_layout="paged")
+
+
+# ---------------------------------------------------------------------------
+# pool exhaustion: admission blocks on pages, not slots
+# ---------------------------------------------------------------------------
+
+def test_pool_exhaustion_blocks_admission_then_drains(cfg, params):
+    # pool of 4 pages; every request needs 2 -> only two of the three
+    # requests fit concurrently even though 3 slots are free
+    reqs = [Request(prompt=np.arange(1, 17, dtype=np.int32), max_new=9,
+                    arrival_t=0.0) for _ in range(3)]
+    eng = ContinuousEngine(cfg, params, n_slots=3, max_seq=64,
+                           kv_layout="paged", page_size=16, pool_pages=4)
+    for r in reqs:
+        eng.submit(r)
+    eng.step()
+    assert len(eng.slots.active_slots()) == 2     # third blocked on pages
+    assert len(eng.queue) == 1
+    assert eng.slots.allocator.available() == 0
+    results = eng.run()
+    assert sorted(results) == sorted(r.rid for r in reqs)
+    for r in reqs:
+        assert len(results[r.rid].tokens) == r.max_new
+    stats = eng.kv_cache_stats()
+    assert stats["peak_pages_in_use"] <= stats["pool_pages"] == 4
+
+
+def test_submit_rejects_request_larger_than_pool(cfg, params):
+    eng = ContinuousEngine(cfg, params, n_slots=1, max_seq=64,
+                           kv_layout="paged", page_size=16, pool_pages=2)
+    with pytest.raises(ValueError):
+        eng.submit(Request(prompt=np.arange(1, 34, dtype=np.int32),
+                           max_new=8))           # 40 positions > 2 pages
+
+
+def test_paged_pool_uses_less_memory_than_contiguous(cfg, params):
+    kw = dict(n_slots=4, max_seq=64)
+    paged = ContinuousEngine(cfg, params, kv_layout="paged", **kw)
+    cont = ContinuousEngine(cfg, params, kv_layout="contiguous", **kw)
+    pb = paged.kv_cache_stats()["kv_cache_bytes"]
+    cb = cont.kv_cache_stats()["kv_cache_bytes"]
+    assert pb < cb, (pb, cb)
+
+
+# (the hypothesis property test lives in test_property.py, which guards
+# the optional dependency for the whole module)
+
+
+def test_chunked_attention_kv_start_window():
+    """kv_start lower-bounds valid positions per sequence — how the
+    paged layout enforces a sliding window without a ring buffer."""
+    from repro.models.attention import chunked_attention
+    B, S, H, D = 3, 16, 2, 8
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, 1, H, D))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, H, D))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, H, D))
+    lens = jnp.asarray([6, 11, 16], jnp.int32)
+    starts = jnp.asarray([2, 0, 9], jnp.int32)
+    got = chunked_attention(q, k, v, causal=False, kv_len=lens,
+                            kv_start=starts)
+    for i in range(B):
+        lo, hi = int(starts[i]), int(lens[i])
+        want = chunked_attention(q[i:i + 1], k[i:i + 1, lo:hi],
+                                 v[i:i + 1, lo:hi], causal=False)
+        np.testing.assert_allclose(np.asarray(got[i]), np.asarray(want[0]),
+                                   atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# dynamic MoE serving-prefill capacity
+# ---------------------------------------------------------------------------
+
+def test_moe_capacity_overflow_channel():
+    cfg = f32_cfg("qwen3-moe-30b-a3b")
+    params = T.init_params(jax.random.PRNGKey(0), cfg, max_seq=64)
+    x = 0.1 * jax.random.normal(jax.random.PRNGKey(1), (1, 16, cfg.d_model))
+    p = jax.tree.map(lambda a: a, params["blocks_moe"])
+    layer0 = jax.tree.map(lambda a: a[0], p)["moe"]
+    y_exact, _ = M.moe_fwd(layer0, cfg, x, drop_free=True)
+    # tight capacity either reproduces the exact result (aux == 0) or
+    # reports the overflow so the caller can retry
+    y_cap, aux = M.moe_fwd(layer0, cfg, x, drop_free=True, capacity=4)
+    if float(aux) == 0.0:
+        np.testing.assert_allclose(np.asarray(y_cap), np.asarray(y_exact),
+                                   atol=1e-6)
+    else:
+        assert float(aux) > 0
+    # full capacity always matches exactly with a zero overflow count
+    y_full, aux_full = M.moe_fwd(layer0, cfg, x, drop_free=True, capacity=16)
+    assert float(aux_full) == 0.0
+    np.testing.assert_allclose(np.asarray(y_full), np.asarray(y_exact),
+                               atol=1e-6)
+
+
+def test_moe_dynamic_capacity_prefill_token_exact():
+    cfg = f32_cfg("qwen3-moe-30b-a3b")
+    params = T.init_params(jax.random.PRNGKey(0), cfg, max_seq=64)
+    eng = ContinuousEngine(cfg, params, n_slots=1, max_seq=64)
+    toks = np.random.default_rng(3).integers(
+        1, cfg.vocab_size, (1, 16)).astype(np.int32)
+    logits_dyn, _ = eng._run_prefill(toks)
+    logits_exact, _, _ = T.forward(params, cfg, {"tokens": jnp.asarray(toks)},
+                                   moe_drop_free=True, return_cache=True,
+                                   remat=False)
+    np.testing.assert_allclose(np.asarray(logits_dyn),
+                               np.asarray(logits_exact), atol=1e-6)
+
+
+def test_initial_capacity_bounds():
+    cfg = get_reduced_config("qwen3-moe-30b-a3b")
+    assert M.initial_capacity(cfg, 16) <= 16
+    assert M.initial_capacity(cfg, 4096) >= 4
+    assert M.initial_capacity(cfg, 4096) % 4 == 0

@@ -169,3 +169,42 @@ def test_filter_drops_pure_cloud_keeps_texture(n):
     keep = np.asarray(keep)
     assert not keep[:n].any()            # clouds dropped
     assert keep[n:].sum() >= 1           # at least some texture kept
+
+
+# ---------------------------------------------------------------------------
+# paged KV serving: paged decode is token-exact with the contiguous engine
+# ---------------------------------------------------------------------------
+
+_PAGED_CACHE = {}
+
+
+def _paged_cfg_params():
+    if not _PAGED_CACHE:
+        from helpers import f32_cfg
+        from repro.models import transformer as T
+        cfg = f32_cfg("smollm-360m")
+        _PAGED_CACHE["cfg"] = cfg
+        _PAGED_CACHE["params"] = T.init_params(
+            jax.random.PRNGKey(0), cfg, max_seq=64)
+    return _PAGED_CACHE["cfg"], _PAGED_CACHE["params"]
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 3),
+       st.sampled_from([8, 16]))
+@settings(max_examples=5, deadline=None)
+def test_paged_engine_matches_contiguous(seed, n_slots, page_size):
+    from repro.serving.batching import poisson_trace
+    from repro.serving.engine import ContinuousEngine
+    cfg, params = _paged_cfg_params()
+    trace = poisson_trace(5, rate=0.9, prompt_lens=(2, 12), max_new=(1, 7),
+                          vocab_size=cfg.vocab_size, seed=seed)
+
+    def run(layout, **kw):
+        eng = ContinuousEngine(cfg, params, n_slots=n_slots, max_seq=32,
+                               kv_layout=layout, **kw)
+        return eng.run([r.clone() for r in trace])
+
+    cont = run("contiguous")
+    paged = run("paged", page_size=page_size)
+    for a, b in zip(sorted(cont), sorted(paged)):
+        np.testing.assert_array_equal(paged[b].tokens, cont[a].tokens)
