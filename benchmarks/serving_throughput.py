@@ -1,4 +1,5 @@
-"""Serving throughput: fixed-slot vs continuous batching (paged KV).
+"""Serving throughput: fixed-slot vs continuous batching (paged KV),
+plus the contact-window preemption replay.
 
 Replays ONE Poisson arrival trace (mixed prompt lengths, heterogeneous
 decode budgets) through three configurations and reports useful tokens
@@ -17,6 +18,20 @@ The paged run must stay token-exact with the contiguous run, hold the
 >= 1.5x fixed-slot speedup, and use strictly less KV-cache memory —
 all three are CI-gated on ``BENCH_serving.json``.
 
+The CONTACT-WINDOW replay then reruns the same trace under a periodic
+downlink schedule (every ``CW_PERIOD`` decode ticks the compute is
+yielded for ``CW_DURATION`` ticks — the paper's ground-station pass):
+
+  * ``preemptive`` — ``serving.scheduler.PreemptiveScheduler`` spills
+    every in-flight sequence at window open and resumes it token-exactly
+    after (reports preemption counts, resume latency, goodput);
+  * ``restart`` — the no-preemption baseline: in-flight sequences are
+    ABORTED at window open and re-decoded from scratch afterwards.
+
+CI gates: the preemptive replay's tokens equal the uninterrupted run's
+for every request, its goodput (useful tokens per clock tick) is >= the
+restart baseline's, and the page pool fully drains (no leak).
+
     PYTHONPATH=src python -m benchmarks.serving_throughput
 """
 from __future__ import annotations
@@ -34,6 +49,10 @@ ARRIVAL_RATE = 0.5          # mean arrivals per decode step
 PROMPT_LENS = (4, 16)
 MAX_NEW = (2, 24)
 PAGE_SIZE = 16
+CW_PERIOD = 40              # decode ticks between window opens
+CW_DURATION = 8             # ticks per window (gap > max max_new so the
+                            # restart baseline cannot livelock)
+CW_MAX_STEPS = 20_000       # replay safety valve
 
 
 def _make_engine_inputs():
@@ -95,6 +114,109 @@ def _serve_continuous(cfg, params, trace, kv_layout):
     return useful, wall, eng.kv_cache_stats(), tokens_by_order
 
 
+def _in_window(clock: int) -> bool:
+    return clock % CW_PERIOD < CW_DURATION
+
+
+def _serve_preemptive(cfg, params, trace):
+    """Contact-window replay: spill every in-flight sequence at window
+    open, resume token-exactly after the pass."""
+    from repro.serving.engine import ContinuousEngine
+    from repro.serving.scheduler import PreemptiveScheduler
+
+    eng = ContinuousEngine(cfg, params, n_slots=N_SLOTS, max_seq=MAX_SEQ,
+                           kv_layout="paged", page_size=PAGE_SIZE)
+    sched = PreemptiveScheduler(eng, preempt_mode="spill")
+    for r in sorted(trace, key=lambda r: r.arrival_t):
+        sched.submit(r)
+    t0 = time.perf_counter()
+    while sched.has_work():
+        if _in_window(eng.clock):
+            sched.preempt_all()
+            sched.step(decode=False)
+        else:
+            sched.step()
+        if eng.clock > CW_MAX_STEPS:
+            raise RuntimeError("contact-window replay did not drain")
+    wall = time.perf_counter() - t0
+    alloc = eng.slots.allocator
+    return {
+        "results": eng.results,
+        "wall_s": wall,
+        "clock_steps": eng.clock,
+        "pool_drained": alloc.in_use == 0 and alloc.reserved == 0,
+        **sched.stats(),
+    }
+
+
+def _serve_restart(cfg, params, trace):
+    """No-preemption baseline: in-flight sequences are aborted at window
+    open (pages released, progress discarded) and re-decoded from
+    scratch after the pass."""
+    from repro.serving.engine import ContinuousEngine
+
+    eng = ContinuousEngine(cfg, params, n_slots=N_SLOTS, max_seq=MAX_SEQ,
+                           kv_layout="paged", page_size=PAGE_SIZE)
+    for r in sorted(trace, key=lambda r: r.arrival_t):
+        eng.submit(r)
+    n_aborts = wasted_tokens = 0
+    t0 = time.perf_counter()
+    while len(eng.queue) or eng.slots.any_active():
+        if _in_window(eng.clock):
+            aborted = [eng.slots.detach(slot, release_pages=True)
+                       for slot in eng.slots.active_slots()]
+            for st in reversed(aborted):              # keep admission order
+                eng.queue.requeue_front(st.request)   # redo from prefill
+                n_aborts += 1
+                wasted_tokens += len(st.emitted)
+            eng.clock += 1                            # pass holds the compute
+        else:
+            eng.step()
+        if eng.clock > CW_MAX_STEPS:
+            raise RuntimeError("restart replay did not drain")
+    wall = time.perf_counter() - t0
+    alloc = eng.slots.allocator
+    return {
+        "results": eng.results,
+        "wall_s": wall,
+        "clock_steps": eng.clock,
+        "pool_drained": alloc.in_use == 0 and alloc.reserved == 0,
+        "n_aborts": n_aborts,
+        "wasted_tokens": wasted_tokens,
+    }
+
+
+def _contact_window_report(cfg, params, trace, reference_tokens):
+    """Run both replays and compare against the uninterrupted tokens
+    (keyed by submission order, rids differ across engines)."""
+    pre = _serve_preemptive(cfg, params, _clone(trace))
+    res = _serve_restart(cfg, params, _clone(trace))
+
+    def summarize(run):
+        results = run.pop("results")
+        tokens = [results[k].tokens for k in sorted(results)]
+        useful = sum(len(t) for t in tokens)
+        run["useful_tokens"] = useful
+        run["goodput_tokens_per_step"] = round(useful / run["clock_steps"], 4)
+        run["tokens_per_s"] = round(useful / run["wall_s"], 2)
+        run["wall_s"] = round(run["wall_s"], 4)
+        return tokens
+
+    pre_tokens = summarize(pre)
+    res_tokens = summarize(res)
+    exact = lambda toks: (len(toks) == len(reference_tokens) and all(
+        np.array_equal(a, b) for a, b in zip(toks, reference_tokens)))
+    return {
+        "windows": {"period_steps": CW_PERIOD, "duration_steps": CW_DURATION},
+        "preemptive": pre,
+        "restart": res,
+        "token_exact_vs_uninterrupted": exact(pre_tokens),
+        "restart_token_exact": exact(res_tokens),
+        "goodput_ratio": round(pre["goodput_tokens_per_step"]
+                               / res["goodput_tokens_per_step"], 3),
+    }
+
+
 def run():
     import jax
     from repro.models import transformer as T
@@ -139,6 +261,14 @@ def run():
                     "prompt_lens": list(PROMPT_LENS),
                     "max_new": list(MAX_NEW),
                     "page_size": PAGE_SIZE}
+    cw = _contact_window_report(cfg, params, trace, tokens_seen["continuous"])
+    out["contact_window"] = cw
+    rows.append(("serving_contact_window_preemptive",
+                 cw["preemptive"]["wall_s"] * 1e6
+                 / max(cw["preemptive"]["useful_tokens"], 1),
+                 {"goodput_ratio": cw["goodput_ratio"],
+                  "n_preemptions": cw["preemptive"]["n_preemptions"],
+                  "token_exact": cw["token_exact_vs_uninterrupted"]}))
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     with open(os.path.join(root, "BENCH_serving.json"), "w") as f:
         json.dump(out, f, indent=2, sort_keys=True)

@@ -51,5 +51,17 @@ CASCADE = dict(
     orbital_altitude_km=500.0,        # Table 1
 )
 
+# Space-ground scheduling parameters (serving.scheduler): the onboard
+# tier decodes between ground-station passes and yields compute to the
+# downlink during them (paper §II: the Pi runs comm/compression work
+# while a pass is open).  s_per_step is a Pi-class per-token decode
+# latency for the ONBOARD tier; the ground tier is assumed always-on.
+SCHEDULER = dict(
+    s_per_step=0.35,                  # onboard decode seconds per token
+    contact_duration_s=480.0,         # ~8 min LEO pass (ContactSchedule)
+    contacts_per_day=6,
+    escalate_threshold=0.62,          # cascade gate (CASCADE) reuse
+)
+
 CONFIG = GROUND            # default arch when loaded via get_config
 REDUCED = ONBOARD

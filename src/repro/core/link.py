@@ -86,6 +86,23 @@ class ContactSchedule:
         return total_s * self.link.downlink_mbps * 1e6 / 8.0 * (
             1.0 - self.link.packet_loss)
 
+    def step_windows(self, s_per_step: float,
+                     horizon_s: float) -> List[Tuple[int, int]]:
+        """Contact windows quantized to engine decode-step ticks
+        [start_step, end_step) — the clock base the preemptive scheduler
+        runs on (``serving.scheduler``).  A window shorter than one step
+        still claims the tick it lands in: the downlink pass always
+        preempts at least one decode step."""
+        out = []
+        for a, b in self.windows(horizon_s):
+            if b <= a:
+                continue         # start past the horizon, end clamped to
+                #                  it: zero-capacity, not a real pass
+            lo = int(a // s_per_step)
+            hi = max(int(-(-b // s_per_step)), lo + 1)
+            out.append((lo, hi))
+        return out
+
 
 def payload_bytes_result(n_items: int, classes: int = 1) -> int:
     """Compact inference result: class id + confidence + bbox-ish tuple

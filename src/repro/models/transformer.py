@@ -752,6 +752,36 @@ def graft_paged_cache(cache: dict, prefix_cache: dict, page_ids) -> dict:
     return jax.tree.map(graft, cache, prefix_cache)
 
 
+def extract_paged_cache(cache: dict, page_ids) -> dict:
+    """Gather pages ``page_ids`` ((n,) int32) of the paged pool back into
+    a single-sequence prefix cache (leaves (L, 1, n * page_size, ...)) —
+    the exact inverse of ``graft_paged_cache``.  Preemption snapshots a
+    live sequence's KV with this, releases its pages, and later resumes
+    by grafting the snapshot into freshly allocated pages; because the
+    snapshot length is a whole number of pages, the graft pads nothing
+    and the round trip is bit-exact."""
+    def gather(pool):
+        sm = pool[:, page_ids]                    # (L, n, ps, ...)
+        L, n, ps = sm.shape[:3]
+        return sm.reshape(L, 1, n * ps, *sm.shape[3:])
+    return jax.tree.map(gather, cache)
+
+
+def extract_slot_cache(cache: dict, template: dict, slot) -> dict:
+    """Slice slot ``slot`` of a multi-slot cache into a single-sequence
+    cache shaped like ``template`` (a batch-1 pytree from ``init_cache``)
+    — the inverse of ``graft_slot_cache``.  The batch axis of each leaf
+    is the first axis where the two shapes differ."""
+    def gather(big, tmpl):
+        start = [0] * big.ndim
+        for i, (a, b) in enumerate(zip(big.shape, tmpl.shape)):
+            if a != b:
+                start[i] = slot
+                break
+        return jax.lax.dynamic_slice(big, tuple(start), tmpl.shape)
+    return jax.tree.map(gather, cache, template)
+
+
 def decode_step(params: dict, cfg: ModelConfig, cache: dict,
                 tokens: jax.Array, pos,
                 block_tables=None) -> Tuple[jax.Array, dict]:

@@ -36,6 +36,7 @@ class Request:
     max_new: int = 16
     rid: int = field(default_factory=lambda: next(_ids))
     arrival_t: float = 0.0                # engine-clock steps
+    priority: int = 0                     # higher preempts lower (scheduler)
 
     def pages_needed(self, page_size: int) -> int:
         """Worst-case KV pages over the request's lifetime: the cache
@@ -48,7 +49,7 @@ class Request:
         """Fresh-rid copy for replaying the same workload through
         another engine (benchmark/test A-B comparisons)."""
         return Request(prompt=self.prompt.copy(), max_new=self.max_new,
-                       arrival_t=self.arrival_t)
+                       arrival_t=self.arrival_t, priority=self.priority)
 
 
 @dataclass
@@ -82,6 +83,25 @@ class RequestQueue:
 
     def pop(self) -> Request:
         return self._q.popleft()
+
+    def arrived(self, now: float) -> List[Request]:
+        """Queued requests whose arrival time has passed, FIFO order."""
+        return [r for r in self._q if r.arrival_t <= now]
+
+    def take(self, req: Request) -> Request:
+        """Remove ``req`` (matched by identity: dataclass equality would
+        compare the numpy prompts) from anywhere in the queue."""
+        for i, r in enumerate(self._q):
+            if r is req:
+                del self._q[i]
+                return req
+        raise ValueError(f"request {req.rid} not queued")
+
+    def requeue_front(self, req: Request) -> None:
+        """Put an already-admitted request back at the head (abort /
+        redo-from-prefill); deliberately exempt from the capacity check
+        — the request's slot was already granted once."""
+        self._q.appendleft(req)
 
     def next_batch(self) -> Optional[Batch]:
         if not self._q:

@@ -163,6 +163,8 @@ class RequestResult:
     prompt_len: int
     admitted_step: int                 # engine clock at admission
     finished_step: int = 0
+    n_preemptions: int = 0             # times swapped out mid-decode
+    logits_last: Optional[np.ndarray] = None   # (V,) final-step logits
 
 
 @dataclass
@@ -172,6 +174,9 @@ class _SlotState:
     next_tok: int                      # last emitted token (next decode input)
     emitted: List[int] = field(default_factory=list)
     admitted_step: int = 0
+    n_preemptions: int = 0
+    last_logits: Optional[np.ndarray] = None   # (V,) set at admission and
+    #                                            finish (confidence routing)
 
 
 class _SlotOccupancy:
@@ -228,6 +233,8 @@ class SlotManager(_SlotOccupancy):
         self.cache = T.init_cache(cfg, n_slots, max_seq)
         self.states: List[Optional[_SlotState]] = [None] * n_slots
         self._graft = jax.jit(T.graft_slot_cache)
+        self._template = None          # batch-1 cache, built on first snapshot
+        self._extract = jax.jit(T.extract_slot_cache)
 
     # -- admission / eviction ----------------------------------------------
     def can_admit(self, req: Request) -> bool:
@@ -240,6 +247,34 @@ class SlotManager(_SlotOccupancy):
 
     def evict(self, slot: int) -> None:
         self.states[slot] = None
+
+    # -- preemption (snapshot / detach / restore) ---------------------------
+    def snapshot(self, slot: int):
+        """Host-side copy of slot ``slot``'s full cache row (the whole
+        max_seq reservation, so restore needs no length bookkeeping)."""
+        if self._template is None:
+            self._template = T.init_cache(self.cfg, 1, self.max_seq)
+        return jax.device_get(
+            self._extract(self.cache, self._template, jnp.int32(slot)))
+
+    def detach(self, slot: int, *, release_pages: bool = True) -> _SlotState:
+        """Remove the slot's state without finishing it.  The contiguous
+        row holds no pooled resource, so ``release_pages`` is a no-op."""
+        st = self.states[slot]
+        self.states[slot] = None
+        return st
+
+    def can_restore(self, state: _SlotState, spilled: bool) -> bool:
+        return True
+
+    def restore(self, slot: int, state: _SlotState, kv=None) -> None:
+        """Re-place a detached sequence; ``kv`` is a ``snapshot`` pytree
+        (required here: the row may have been reused since detach)."""
+        assert self.states[slot] is None, f"slot {slot} occupied"
+        assert kv is not None, "contiguous restore needs the KV snapshot"
+        self.cache = self._graft(self.cache, jax.tree.map(jnp.asarray, kv),
+                                 jnp.int32(slot))
+        self.states[slot] = state
 
     def kv_cache_stats(self) -> dict:
         return {"kv_layout": "contiguous", **super().kv_cache_stats()}
@@ -279,6 +314,7 @@ class PagedSlotManager(_SlotOccupancy):
         self.cache = T.init_paged_cache(cfg, pool_pages + 1, page_size)
         self.states: List[Optional[_PagedSlotState]] = [None] * n_slots
         self._graft = jax.jit(T.graft_paged_cache)
+        self._extract = jax.jit(T.extract_paged_cache)
 
     def _lifetime_pages(self, req: Request) -> int:
         return req.pages_needed(self.page_size)
@@ -303,6 +339,8 @@ class PagedSlotManager(_SlotOccupancy):
         self.states[slot] = _PagedSlotState(
             request=req, pos=state.pos, next_tok=state.next_tok,
             emitted=state.emitted, admitted_step=state.admitted_step,
+            n_preemptions=state.n_preemptions,
+            last_logits=state.last_logits,
             pages=pages, budget=budget)
 
     def evict(self, slot: int) -> None:
@@ -310,6 +348,49 @@ class PagedSlotManager(_SlotOccupancy):
         self.allocator.release(st.pages,
                                unreserve=st.budget - len(st.pages))
         self.states[slot] = None
+
+    # -- preemption (snapshot / detach / restore) ---------------------------
+    def snapshot(self, slot: int):
+        """Host-side copy of the slot's live pages as a prefix-shaped
+        pytree (leaves (L, 1, n_pages * page_size, ...)) — the
+        ``extract_paged_cache`` inverse of the admission graft, so
+        restore round-trips bit-exactly through ``graft_paged_cache``."""
+        st = self.states[slot]
+        return jax.device_get(
+            self._extract(self.cache, jnp.asarray(st.pages, jnp.int32)))
+
+    def detach(self, slot: int, *, release_pages: bool) -> _PagedSlotState:
+        """Remove the slot's state without finishing it.  With
+        ``release_pages`` (spill preemption) the sequence's pages AND its
+        unused reservation go back to the pool — reclaimable by waiting
+        requests — and the caller must hold a ``snapshot``; without
+        (resident preemption) the pages stay committed and restore is
+        free."""
+        st = self.states[slot]
+        self.states[slot] = None
+        if release_pages:
+            self.allocator.release(st.pages,
+                                   unreserve=st.budget - len(st.pages))
+            st.pages = []
+        return st
+
+    def can_restore(self, state: _PagedSlotState, spilled: bool) -> bool:
+        """Spilled sequences re-reserve their full lifetime budget, so a
+        restore can never stall mid-decode once admitted — the same
+        discipline as first admission."""
+        return (not spilled) or self.allocator.can_reserve(state.budget)
+
+    def restore(self, slot: int, state: _PagedSlotState, kv=None) -> None:
+        assert self.states[slot] is None, f"slot {slot} occupied"
+        if kv is not None:                     # spilled: realloc + graft back
+            leaf = jax.tree.leaves(kv)[0]
+            n = leaf.shape[2] // self.page_size
+            self.allocator.reserve(state.budget)
+            state.pages = self.allocator.alloc(n)
+            self.cache = self._graft(self.cache,
+                                     jax.tree.map(jnp.asarray, kv),
+                                     jnp.asarray(state.pages, jnp.int32))
+        self.states[slot] = state
 
     # -- paged decode plumbing ---------------------------------------------
     def ensure_write_pages(self) -> None:
@@ -458,7 +539,8 @@ class ContinuousEngine:
         logits, pcache = self._run_prefill(toks)
         first = int(jnp.argmax(logits[0, S - 1]))
         st = _SlotState(request=req, pos=S, next_tok=first, emitted=[first],
-                        admitted_step=self.clock)
+                        admitted_step=self.clock,
+                        last_logits=np.asarray(logits[0, S - 1], np.float32))
         self.slots.place(slot, pcache, st)
         if len(st.emitted) >= req.max_new:    # max_new == 1: done at prefill
             self._finish(slot)
@@ -469,19 +551,17 @@ class ContinuousEngine:
         self.results[req.rid] = RequestResult(
             rid=req.rid, tokens=np.asarray(st.emitted, np.int64),
             prompt_len=len(req.prompt), admitted_step=st.admitted_step,
-            finished_step=self.clock)
+            finished_step=self.clock, n_preemptions=st.n_preemptions,
+            logits_last=st.last_logits)
         self.finish_order.append(req.rid)
         self.slots.evict(slot)
 
     # -- the serve loop ----------------------------------------------------
-    def step(self) -> List[int]:
-        """Admit arrived requests into free slots, run ONE batched decode
-        step over all slots, evict finished sequences.  Returns the rids
-        finished during this step.  Paged layout: admission additionally
-        blocks (FIFO) while the page pool cannot cover the head
-        request's worst-case lifetime — eviction returns pages, so the
-        head is admitted once enough earlier sequences finish."""
-        before = len(self.finish_order)
+    def _admit_arrivals(self) -> None:
+        """Admit arrived requests (FIFO) into free slots.  Paged layout:
+        admission additionally blocks while the page pool cannot cover
+        the head request's worst-case lifetime — eviction returns pages,
+        so the head is admitted once enough earlier sequences finish."""
         for slot in self.slots.free_slots():
             req = self.queue.peek()
             if req is None or req.arrival_t > self.clock:
@@ -489,9 +569,13 @@ class ContinuousEngine:
             if not self.slots.can_admit(req):
                 break                         # page pool exhausted: wait
             self._admit(self.queue.pop(), slot)
+
+    def _decode_once(self) -> None:
+        """Run ONE batched decode step over all active slots and evict
+        finished sequences; an idle tick when no slot is active."""
         if not self.slots.any_active():
             self.clock += 1                   # idle tick: wait for arrivals
-            return self.finish_order[before:]
+            return
         toks, pos = self.slots.decode_inputs()
         if self.kv_layout == "paged":
             self.slots.ensure_write_pages()
@@ -510,7 +594,20 @@ class ContinuousEngine:
             st.next_tok = int(nxt[slot])
             st.pos += 1
             if len(st.emitted) >= st.request.max_new:
+                # fetch the final-step logits row only for sequences
+                # finishing now (confidence routing); copying every step
+                # would put a (n_slots, V) host transfer on the hot path
+                st.last_logits = np.asarray(logits[slot, 0], np.float32)
                 self._finish(slot)
+
+    def step(self) -> List[int]:
+        """Admit arrived requests into free slots, run one batched decode
+        step, evict finished sequences.  Returns the rids finished during
+        this step.  (``serving.scheduler`` drives ``_admit_arrivals`` /
+        ``_decode_once`` separately to interpose preemption.)"""
+        before = len(self.finish_order)
+        self._admit_arrivals()
+        self._decode_once()
         return self.finish_order[before:]
 
     def run(self, requests: Optional[List[Request]] = None

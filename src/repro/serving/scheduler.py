@@ -1,0 +1,468 @@
+"""Contact-window preemptive scheduling on the continuous engine.
+
+The paper's setting (§II): onboard compute must yield to downlink work
+whenever a ground-station pass opens, and the downlink is only available
+during those passes.  PR 2's page-reservation design makes yielding
+cheap — a live sequence is just (slot state, block table, KV pages) —
+so this module adds:
+
+  * ``PreemptiveScheduler`` — a priority scheduler over ONE
+    ``ContinuousEngine``.  ``preempt(slot)`` snapshots the slot's state
+    plus block table into a swap ledger and evicts the slot; the KV
+    either stays resident (pages remain committed in the device pool)
+    or spills to a host-side store (``extract_paged_cache`` snapshot,
+    pages released — reclaimable by waiting requests).  ``resume()``
+    re-places the sequence token-exactly: a spilled snapshot is grafted
+    back through ``graft_paged_cache`` into freshly allocated pages, a
+    whole number of pages so the round trip is bit-exact.  Higher
+    ``Request.priority`` arrivals may preempt lower-priority active
+    sequences; swapped sequences resume highest-priority-first, so
+    every admitted request eventually finishes.
+  * ``SpaceGroundScheduler`` — drives a (satellite, ground) engine pair
+    (``configs/tiansuan_pair``) against ``ContactSchedule`` windows:
+    satellite decode is preempted for the duration of each pass, the
+    pass's downlink budget transmits finished results (compact) and
+    escalates low-confidence sequences (raw prompt) to the ground tier
+    via the ``ConfidenceGate`` from ``core/cascade``'s deployment, and
+    an ``EnergyModel`` ledger accounts compute vs comm joules.
+
+Both schedulers are deterministic: same trace + same windows => same
+tokens, preemption points, and ledger.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.energy import EnergyModel
+from repro.core.gating import ConfidenceGate
+from repro.core.link import ContactSchedule, payload_bytes_raw, \
+    payload_bytes_result
+from repro.core.telemetry import Ledger
+from repro.serving.batching import Request
+from repro.serving.engine import ContinuousEngine, RequestResult
+
+
+@dataclass
+class SwapEntry:
+    """One preempted sequence in the swap ledger."""
+    state: object                       # the engine's detached _SlotState
+    kv: Optional[dict]                  # host KV snapshot (None = resident)
+    preempted_step: int                 # engine clock at preemption
+
+    @property
+    def spilled(self) -> bool:
+        return self.kv is not None
+
+    @property
+    def rid(self) -> int:
+        return self.state.request.rid
+
+    @property
+    def priority(self) -> int:
+        return self.state.request.priority
+
+
+class PreemptiveScheduler:
+    """Preempt-and-resume scheduling over one ``ContinuousEngine``.
+
+    preempt_mode: "spill" (default) releases the sequence's pages to
+    the pool so waiting requests can claim them; "resident" keeps pages
+    committed for a zero-copy resume (right when the pool is
+    uncontended and the pause is short).  Either way resume is
+    token-exact — the resident path never moves KV, the spill path
+    round-trips whole pages through ``extract_paged_cache`` /
+    ``graft_paged_cache`` (contiguous layout: the full cache row).
+    """
+
+    def __init__(self, engine: ContinuousEngine, *,
+                 preempt_mode: str = "spill"):
+        if preempt_mode not in ("spill", "resident"):
+            raise ValueError(f"unknown preempt_mode {preempt_mode!r}")
+        self.engine = engine
+        self.preempt_mode = preempt_mode
+        self.swapped: Dict[int, SwapEntry] = {}      # rid -> entry
+        self.n_preemptions = 0
+        self.n_spills = 0
+        self.n_resumes = 0
+        self.swapped_steps = 0          # total clock ticks spent swapped out
+        self.resume_s: List[float] = [] # wall seconds per restore
+
+    # -- delegation ---------------------------------------------------------
+    @property
+    def clock(self) -> int:
+        return self.engine.clock
+
+    @property
+    def results(self) -> Dict[int, RequestResult]:
+        return self.engine.results
+
+    def submit(self, req: Request) -> int:
+        return self.engine.submit(req)
+
+    def has_work(self) -> bool:
+        return bool(len(self.engine.queue) or self.engine.slots.any_active()
+                    or self.swapped)
+
+    # -- preemption ---------------------------------------------------------
+    def preempt(self, slot: int, mode: Optional[str] = None) -> int:
+        """Swap the sequence in ``slot`` out; returns its rid.  The slot
+        is free afterwards, and under "spill" its KV pages are back in
+        the pool for waiting requests."""
+        mode = mode or self.preempt_mode
+        slots = self.engine.slots
+        if not hasattr(slots, "allocator"):
+            mode = "spill"       # contiguous rows have no resident identity:
+            #                      the slot may be regrafted while swapped
+        assert slots.states[slot] is not None, f"slot {slot} empty"
+        kv = slots.snapshot(slot) if mode == "spill" else None
+        st = slots.detach(slot, release_pages=mode == "spill")
+        st.n_preemptions += 1
+        self.swapped[st.request.rid] = SwapEntry(
+            state=st, kv=kv, preempted_step=self.engine.clock)
+        self.n_preemptions += 1
+        self.n_spills += int(mode == "spill")
+        return st.request.rid
+
+    def preempt_all(self, mode: Optional[str] = None) -> List[int]:
+        """Yield every active slot — the contact-window entry point."""
+        return [self.preempt(s, mode) for s in self.engine.slots.active_slots()]
+
+    def resume(self, rid: int, slot: int) -> None:
+        """Re-place a swapped sequence into a free slot, token-exactly."""
+        entry = self.swapped.pop(rid)
+        t0 = time.perf_counter()
+        self.engine.slots.restore(slot, entry.state, entry.kv)
+        self.resume_s.append(time.perf_counter() - t0)
+        self.n_resumes += 1
+        self.swapped_steps += self.engine.clock - entry.preempted_step
+
+    # -- the scheduling loop -------------------------------------------------
+    def _resume_order(self) -> List[SwapEntry]:
+        return sorted(self.swapped.values(),
+                      key=lambda e: (-e.priority, e.preempted_step, e.rid))
+
+    def _arrived(self) -> List[Request]:
+        return self.engine.queue.arrived(self.engine.clock)
+
+    def _budget_pages(self, req: Request) -> int:
+        slots = self.engine.slots
+        if hasattr(slots, "_lifetime_pages"):
+            return slots._lifetime_pages(req)
+        return 0                               # contiguous: slots only
+
+    def _fill_free_slots(self) -> None:
+        """Fill free slots highest-priority-first: swapped sequences
+        (they hold progress) compete with arrived queue entries; ties go
+        to the earlier preemption/arrival.  Both lists keep a
+        head-of-line discipline so a large request cannot be starved by
+        a stream of smaller later ones: only the queue head (in priority
+        order) is ever considered, and a spilled swap head whose pages
+        are not yet reservable blocks later SPILLED entries (resident
+        entries may still skip ahead — resuming them consumes no pages,
+        so they cannot starve the head)."""
+        slots = self.engine.slots
+        for slot in slots.free_slots():
+            cands: List[Tuple[tuple, str, object]] = []
+            blocked_prio: Optional[int] = None
+            for e in self._resume_order():
+                if not slots.can_restore(e.state, e.spilled):
+                    if blocked_prio is None:   # only spilled entries fail
+                        blocked_prio = e.priority
+                    continue
+                if e.spilled and blocked_prio is not None:
+                    continue                   # don't steal the head's pages
+                cands.append(((-e.priority, e.preempted_step, e.rid),
+                              "swap", e))
+                break
+            arrived = sorted(self._arrived(),
+                             key=lambda r: (-r.priority, r.arrival_t, r.rid))
+            if arrived and slots.can_admit(arrived[0]):
+                r = arrived[0]
+                # a blocked swap head also vetoes page-consuming queue
+                # admissions of its own (or lower) priority — the swapped
+                # sequence holds progress and must not be starved by a
+                # steady stream of fresh arrivals
+                if blocked_prio is None or r.priority > blocked_prio:
+                    cands.append(((-r.priority, r.arrival_t, r.rid),
+                                  "queue", r))
+            if not cands:
+                break
+            _, kind, obj = min(cands)
+            if kind == "swap":
+                self.resume(obj.rid, slot)
+            else:
+                self.engine._admit(self.engine.queue.take(obj), slot)
+
+    def _best_blocked(self) -> Optional[Tuple[Request, int]]:
+        """Highest-priority waiting work that cannot be placed right now
+        (no free slot, or — paged — not enough reservable pages), with
+        the page count a placement would actually consume: the full
+        lifetime budget for queue/spilled entries, zero for resident
+        entries (their pages are still committed — only a slot is
+        missing)."""
+        slots = self.engine.slots
+        free = bool(slots.free_slots())
+        out: List[Tuple[tuple, Request, int]] = []
+        for e in self.swapped.values():
+            if not free or not slots.can_restore(e.state, e.spilled):
+                # contiguous states carry no page budget: slots only
+                need = getattr(e.state, "budget", 0) if e.spilled else 0
+                out.append(((-e.priority, e.preempted_step, e.rid),
+                            e.state.request, need))
+        for r in self._arrived():
+            if not free or not slots.can_admit(r):
+                out.append(((-r.priority, r.arrival_t, r.rid), r,
+                            self._budget_pages(r)))
+        if not out:
+            return None
+        _, req, need = min(out)
+        return req, need
+
+    def _admit_by_priority(self) -> None:
+        """Fill free slots, then let blocked higher-priority work spill
+        STRICTLY-lower-priority active sequences — but only when
+        reclaiming every such victim would actually cover the blocked
+        request's page need (otherwise preemption is pure churn: the
+        victim's pages can never add up to an admission)."""
+        self._fill_free_slots()
+        slots = self.engine.slots
+        while True:
+            blocked = self._best_blocked()
+            if blocked is None:
+                return
+            best, need = blocked
+            victims = [s for s in slots.active_slots()
+                       if slots.states[s].request.priority < best.priority]
+            if not victims:
+                return
+            alloc = getattr(slots, "allocator", None)
+            if alloc is not None:
+                reclaim = sum(slots.states[s].budget for s in victims)
+                if alloc.available() + reclaim < need:
+                    return                     # infeasible even spilling all
+            # spill weakest-first until the blocked request fits
+            victims.sort(key=lambda s: (slots.states[s].request.priority,
+                                        -slots.states[s].request.arrival_t))
+            for v in victims:
+                self.preempt(v, "spill")       # frees the slot AND its pages
+                if alloc is None or alloc.available() >= need:
+                    break
+            self._fill_free_slots()
+
+    def step(self, *, decode: bool = True) -> List[int]:
+        """One scheduler tick: resume/admit by priority, then one batched
+        decode step (or an idle tick with ``decode=False`` — a contact
+        window holding the compute).  Returns rids finished this tick."""
+        eng = self.engine
+        before = len(eng.finish_order)
+        if decode:
+            self._admit_by_priority()
+            eng._decode_once()
+        else:
+            eng.clock += 1                     # compute yielded: idle tick
+        return eng.finish_order[before:]
+
+    def run(self, requests: Optional[List[Request]] = None,
+            ) -> Dict[int, RequestResult]:
+        """Drain: submit ``requests``, then step until queue, slots and
+        swap ledger are all empty."""
+        for r in sorted(requests or [], key=lambda r: r.arrival_t):
+            self.submit(r)
+        while self.has_work():
+            self.step()
+        return self.engine.results
+
+    def stats(self) -> dict:
+        lat = self.resume_s
+        return {
+            "n_preemptions": self.n_preemptions,
+            "n_spills": self.n_spills,
+            "n_resumes": self.n_resumes,
+            "swapped_steps": self.swapped_steps,
+            "resume_latency_s_mean": round(float(np.mean(lat)), 6) if lat
+            else 0.0,
+            "resume_latency_s_max": round(float(np.max(lat)), 6) if lat
+            else 0.0,
+        }
+
+
+# ==========================================================================
+# space-ground tiering
+# ==========================================================================
+
+@dataclass
+class SpaceGroundReport:
+    """Final answers plus the byte/energy ledger of one replay."""
+    tokens: Dict[int, np.ndarray]       # rid -> final token stream
+    sat_results: Dict[int, RequestResult]
+    ground_results: Dict[int, RequestResult]
+    escalated: List[int]                # rids re-answered by the ground tier
+    undelivered: List[int]              # rids whose downlink missed the horizon
+    ledger: Ledger = field(default_factory=Ledger)
+    n_preemptions: int = 0
+    windows: List[Tuple[int, int]] = field(default_factory=list)
+
+
+class SpaceGroundScheduler:
+    """Two-tier scheduling between a satellite and a ground engine.
+
+    The satellite engine decodes between ground-station passes; when a
+    pass opens (``ContactSchedule`` quantized to decode ticks via
+    ``step_windows``), every in-flight satellite sequence is preempted
+    for the pass duration and the downlink transmits, in FIFO order and
+    within the pass's byte budget: (a) compact results of confident
+    finished sequences, (b) raw prompts of low-confidence ones — the
+    ``core/cascade`` gate decides which — which the ground engine then
+    re-answers.  The ground tier is always-on (it's on Earth) and steps
+    once per satellite tick.
+
+    Deterministic: the only clock is the satellite engine's decode tick
+    (``s_per_step`` seconds each), so the same trace + schedule replays
+    to identical tokens, preemptions, and ledger totals.
+    """
+
+    def __init__(self, sat_engine: ContinuousEngine,
+                 ground_engine: ContinuousEngine, *,
+                 schedule: Optional[ContactSchedule] = None,
+                 gate: Optional[ConfidenceGate] = None,
+                 energy: Optional[EnergyModel] = None,
+                 s_per_step: float = 0.35,
+                 horizon_s: float = 86_400.0,
+                 preempt_mode: str = "spill"):
+        self.sat = PreemptiveScheduler(sat_engine, preempt_mode=preempt_mode)
+        self.ground = ground_engine
+        # fresh default instances per scheduler: the models hold mutable
+        # dict fields a caller may tune (e.g. energy.subsystem_w)
+        self.schedule = schedule if schedule is not None else ContactSchedule()
+        self.gate = gate if gate is not None else ConfidenceGate()
+        self.energy = energy if energy is not None else EnergyModel()
+        self.s_per_step = s_per_step
+        self.horizon_steps = int(horizon_s / s_per_step)
+        self.windows = self.schedule.step_windows(s_per_step, horizon_s)
+        # downlink budget per in-window tick, derived from the link
+        # model's own loss-adjusted rate (downlink_time_s(1) = s/byte)
+        self.bytes_per_step = (s_per_step
+                               / self.schedule.link.downlink_time_s(1.0))
+
+    def _in_window(self, t: int) -> bool:
+        return any(lo <= t < hi for lo, hi in self.windows)
+
+    def _next_window_start(self, t: int) -> Optional[int]:
+        starts = [lo for lo, hi in self.windows if hi > t]
+        return min(starts) if starts else None
+
+    def run(self, requests: List[Request]) -> SpaceGroundReport:
+        rep = SpaceGroundReport(tokens={}, sat_results={}, ground_results={},
+                                escalated=[], undelivered=[],
+                                windows=list(self.windows))
+        led = rep.ledger
+        for r in sorted(requests, key=lambda r: r.arrival_t):
+            self.sat.submit(r)
+        by_rid = {r.rid: r for r in requests}
+        ground_to_rid: Dict[int, int] = {}
+        backlog: List[Tuple[int, float, bool]] = []  # (rid, bytes, escalate)
+        tx_remaining = 0.0               # byte budget left this tick
+
+        def classify(rid: int) -> None:
+            """Queue a finished satellite sequence for downlink."""
+            res = self.sat.results[rid]
+            rep.sat_results[rid] = res
+            dec = self.gate.decide(res.logits_last[None])
+            esc = bool(np.asarray(dec["escalate"])[0])
+            if esc:
+                nbytes = payload_bytes_raw(1, (res.prompt_len,), 4)
+            else:
+                nbytes = payload_bytes_result(len(res.tokens))
+            led.add("items_total", 1)
+            led.add("items_escalated", int(esc))
+            led.add("bytes_results", 0 if esc else nbytes)
+            led.add("bytes_raw_escalated", nbytes if esc else 0)
+            led.add("bytes_bentpipe_baseline",
+                    payload_bytes_raw(1, (res.prompt_len,), 4))
+            backlog.append((rid, float(nbytes), esc))
+
+        t = self.sat.clock
+        while True:
+            ground_busy = bool(len(self.ground.queue)
+                               or self.ground.slots.any_active())
+            if not (self.sat.has_work() or backlog or ground_busy):
+                break
+            if t >= self.horizon_steps and not (self.sat.has_work()
+                                                or ground_busy):
+                # backlog missed every window: record, don't silently drop
+                rep.undelivered = [rid for rid, _, _ in backlog]
+                backlog.clear()
+                break
+            in_window = self._in_window(t)
+            if in_window:
+                # a pass holds the compute: preempt everything in flight
+                self.sat.preempt_all()
+                # ...and spends the tick transmitting the backlog FIFO
+                tx_remaining = self.bytes_per_step
+                tx_active = bool(backlog)
+                while backlog and backlog[0][1] <= tx_remaining:
+                    rid, nbytes, esc = backlog.pop(0)
+                    tx_remaining -= nbytes
+                    led.add("bytes_downlinked", nbytes)
+                    if esc:
+                        rep.escalated.append(rid)
+                        src = by_rid[rid]
+                        g = Request(prompt=src.prompt.copy(),
+                                    max_new=src.max_new,
+                                    priority=src.priority)
+                        ground_to_rid[g.rid] = rid
+                        self.ground.submit(g)
+                if backlog and tx_active:
+                    # partial transmission of the head carries over
+                    rid, nbytes, esc = backlog[0]
+                    backlog[0] = (rid, nbytes - tx_remaining, esc)
+                    led.add("bytes_downlinked", tx_remaining)
+                if tx_active:
+                    led.add("downlink_s", self.s_per_step)
+                    led.add("energy_comm_j",
+                            self.energy.comm_energy_j(self.s_per_step))
+                self.sat.step(decode=False)
+            else:
+                if self.sat.has_work():
+                    finished = self.sat.step()
+                    if self.sat.engine.slots.any_active() or finished:
+                        led.add("energy_compute_j",
+                                self.energy.inference_energy_j(
+                                    1, self.s_per_step))
+                    for rid in finished:
+                        classify(rid)
+                elif backlog:
+                    nxt = self._next_window_start(t)
+                    if nxt is None:      # no pass left in the horizon
+                        rep.undelivered = [rid for rid, _, _ in backlog]
+                        backlog.clear()
+                        continue
+                    self.sat.engine.clock = nxt     # sleep to the next pass
+                    # the ground tier gets the whole inter-pass gap, not
+                    # one tick: drain whatever it is already decoding
+                    while (len(self.ground.queue)
+                           or self.ground.slots.any_active()):
+                        self.ground.step()
+                else:
+                    self.sat.step()      # idle tick: wait for arrivals
+            self.ground.step()           # always-on tier
+            t = self.sat.clock
+
+        # drain the ground tier (it may still be decoding escalations)
+        while len(self.ground.queue) or self.ground.slots.any_active():
+            self.ground.step()
+
+        rep.ground_results = {ground_to_rid[grid]: res
+                              for grid, res in self.ground.results.items()
+                              if grid in ground_to_rid}
+        for rid, res in rep.sat_results.items():
+            if rid in rep.ground_results:
+                rep.tokens[rid] = rep.ground_results[rid].tokens
+            else:
+                rep.tokens[rid] = res.tokens
+        rep.n_preemptions = self.sat.n_preemptions
+        return rep

@@ -172,6 +172,106 @@ def test_filter_drops_pure_cloud_keeps_texture(n):
 
 
 # ---------------------------------------------------------------------------
+# block allocator: reservation accounting is exact under random op traces
+# ---------------------------------------------------------------------------
+
+@given(st.integers(2, 24), st.lists(st.integers(0, 2 ** 31 - 1),
+                                    min_size=1, max_size=40))
+@settings(**SETTINGS)
+def test_allocator_accounting_exact_under_random_ops(n_pages, op_seeds):
+    """Drive a BlockAllocator with random (valid) reserve/alloc/release
+    ops against a mirror model: in_use, reserved, and available() must
+    stay exact, released tables must never double-free, and a full
+    drain restores the pool bit-for-bit."""
+    from repro.serving.paging import BlockAllocator, PoolExhausted
+    a = BlockAllocator(n_pages)
+    tables = []                       # (pages, outstanding_reservation)
+    for seed in op_seeds:
+        rng = np.random.default_rng(seed)
+        op = rng.integers(0, 3)
+        if op == 0 and a.available() > 0:          # admit: reserve + alloc
+            budget = int(rng.integers(1, a.available() + 1))
+            a.reserve(budget)
+            first = int(rng.integers(1, budget + 1))
+            pages = a.alloc(first)
+            tables.append((pages, budget - first))
+        elif op == 1 and tables:                   # grow one page
+            i = int(rng.integers(len(tables)))
+            pages, rest = tables[i]
+            if rest > 0:
+                pages.extend(a.alloc(1))
+                tables[i] = (pages, rest - 1)
+        elif op == 2 and tables:                   # evict
+            pages, rest = tables.pop(int(rng.integers(len(tables))))
+            a.release(pages, unreserve=rest)
+        # the mirror model must agree exactly after every op
+        assert a.in_use == sum(len(p) for p, _ in tables)
+        assert a.reserved == sum(r for _, r in tables)
+        assert a.available() == n_pages - a.in_use - a.reserved
+        assert len(a._free) == n_pages - a.in_use
+        assert a._free_set == set(a._free)
+    drained = []
+    for pages, rest in tables:
+        a.release(pages, unreserve=rest)
+        drained.extend(pages)
+    if drained:
+        with pytest.raises(PoolExhausted):         # no double free, ever
+            a.release([drained[0]])
+    assert a.in_use == 0 and a.reserved == 0 and a.available() == n_pages
+
+
+# ---------------------------------------------------------------------------
+# preemptive scheduler: invariants under random arrival/preempt/resume traces
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=5, deadline=None)
+def test_scheduler_invariants_random_preemption(seed):
+    """Random Poisson arrivals with random priorities, random preemption
+    (random slot, random spill/resident mode) injected at random ticks:
+    every admitted request finishes with exactly max_new tokens (no
+    starvation), the allocator's free count is fully restored after the
+    drain (no page leak), and reservation accounting ends exact.
+    Double-free would raise PoolExhausted mid-run."""
+    from repro.serving.batching import poisson_trace
+    from repro.serving.engine import ContinuousEngine
+    from repro.serving.scheduler import PreemptiveScheduler
+    cfg, params = _paged_cfg_params()
+    rng = np.random.default_rng(seed)
+    trace = poisson_trace(5, rate=0.9, prompt_lens=(2, 12), max_new=(1, 7),
+                          vocab_size=cfg.vocab_size, seed=seed)
+    for r in trace:
+        r.priority = int(rng.integers(0, 3))
+    eng = ContinuousEngine(cfg, params, n_slots=2, max_seq=32,
+                           kv_layout="paged", page_size=8)
+    sched = PreemptiveScheduler(eng)
+    for r in sorted(trace, key=lambda r: r.arrival_t):
+        sched.submit(r)
+    guard = 0
+    while sched.has_work():
+        guard += 1
+        assert guard < 500, "scheduler failed to drain (starvation?)"
+        active = eng.slots.active_slots()
+        if active and rng.random() < 0.3:
+            slot = int(rng.choice(active))
+            sched.preempt(slot,
+                          "spill" if rng.random() < 0.7 else "resident")
+        sched.step(decode=bool(rng.random() < 0.9))
+    results = sched.results
+    assert sorted(results) == sorted(r.rid for r in trace)   # no starvation
+    by_rid = {r.rid: r for r in trace}
+    for rid, res in results.items():
+        assert len(res.tokens) == by_rid[rid].max_new
+        # the final token always came from the recorded final logits
+        assert int(np.argmax(res.logits_last)) == int(res.tokens[-1])
+    alloc = eng.slots.allocator
+    assert alloc.in_use == 0 and alloc.reserved == 0        # no page leak
+    assert len(alloc._free) == alloc.n_pages                # count restored
+    assert alloc._free_set == set(alloc._free)              # no double free
+    assert sched.n_resumes == sched.n_preemptions
+
+
+# ---------------------------------------------------------------------------
 # paged KV serving: paged decode is token-exact with the contiguous engine
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,548 @@
+"""Contact-window preemptive scheduler: preempt-and-resume
+token-exactness (the tentpole oracle), pool-exhaustion x preemption
+interplay, priority preemption, and the space-ground two-tier replay.
+
+The hypothesis property tests for the scheduler invariants (no page
+leak, no double free, no starvation, exact reservation accounting)
+live in ``test_property.py``, which guards the optional dependency.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import tiansuan_pair as TP
+from repro.core.gating import ConfidenceGate
+from repro.core.link import ContactSchedule
+from repro.models import transformer as T
+from repro.serving.batching import Request
+from repro.serving.engine import ContinuousEngine
+from repro.serving.paging import BlockAllocator, PoolExhausted
+from repro.serving.scheduler import (PreemptiveScheduler,
+                                     SpaceGroundScheduler)
+
+from helpers import f32_cfg
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return f32_cfg("smollm-360m")
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return T.init_params(jax.random.PRNGKey(0), cfg, max_seq=64)
+
+
+def _prompt(rng, n, vocab):
+    return rng.integers(1, vocab, n).astype(np.int32)
+
+
+def _solo_tokens(cfg, params, prompt, max_new, **engine_kw):
+    eng = ContinuousEngine(cfg, params, n_slots=2, max_seq=64, **engine_kw)
+    res = eng.run([Request(prompt=prompt.copy(), max_new=max_new)])
+    return list(res.values())[0].tokens
+
+
+def _assert_drained(eng):
+    """The page pool must be exactly restored after a full drain."""
+    alloc = getattr(eng.slots, "allocator", None)
+    if alloc is not None:
+        assert alloc.in_use == 0 and alloc.reserved == 0
+        assert len(alloc._free) == alloc.n_pages
+        assert alloc._free_set == set(alloc._free)
+
+
+def _preempt_resume_sweep(cfg, params, *, mode, max_new=6, n_slots=2,
+                          with_filler=True, **engine_kw):
+    """Interrupt a probe at EVERY decode step k, resume, and require the
+    exact token stream of an uninterrupted run.  One engine serves the
+    whole sweep (drained between iterations) so jit caches stay warm;
+    a filler decodes while the probe is swapped out, so resumed pages
+    really are re-allocated, not accidentally untouched."""
+    rng = np.random.default_rng(42)
+    prompt = _prompt(rng, 7, cfg.vocab_size)
+    filler_prompt = _prompt(rng, 5, cfg.vocab_size)
+    want = _solo_tokens(cfg, params, prompt, max_new, **engine_kw)
+
+    eng = ContinuousEngine(cfg, params, n_slots=n_slots, max_seq=64,
+                           **engine_kw)
+    sched = PreemptiveScheduler(eng, preempt_mode=mode)
+    # k = 0 preempts straight after admission (only the prefill token
+    # exists); k = max_new - 2 preempts one step before the finish line
+    for k in range(max_new - 1):
+        probe = Request(prompt=prompt.copy(), max_new=max_new)
+        sched.submit(probe)
+        sched.step(decode=False)       # pure clock tick keeps runs aligned
+        sched._admit_by_priority()     # admission without a decode step
+        for _ in range(k):
+            sched.step()
+        (slot,) = [s for s in eng.slots.active_slots()
+                   if eng.slots.states[s].request.rid == probe.rid]
+        sched.preempt(slot)
+        if with_filler:                # pool churn while the probe is out
+            sched.submit(Request(prompt=filler_prompt.copy(), max_new=3))
+            sched.step()
+            sched.step()
+        else:
+            sched.step(decode=False)
+        res = sched.run()
+        np.testing.assert_array_equal(res[probe.rid].tokens, want)
+        assert res[probe.rid].n_preemptions == 1
+        _assert_drained(eng)
+    assert sched.n_resumes == sched.n_preemptions == max_new - 1
+
+
+# ---------------------------------------------------------------------------
+# preempt-then-resume token-exactness
+# ---------------------------------------------------------------------------
+
+def test_preempt_resume_every_step_spill(cfg, params):
+    _preempt_resume_sweep(cfg, params, mode="spill")
+
+
+def test_preempt_resume_every_step_resident(cfg, params):
+    _preempt_resume_sweep(cfg, params, mode="resident")
+
+
+def test_preempt_resume_contiguous_layout(cfg, params):
+    _preempt_resume_sweep(cfg, params, mode="spill",
+                          kv_layout="contiguous")
+
+
+def test_contiguous_resident_coerces_to_spill(cfg, params):
+    """The contiguous layout has no resident identity (the row may be
+    regrafted while swapped) — resident preemption must degrade to a
+    spill instead of resuming stale KV."""
+    eng = ContinuousEngine(cfg, params, n_slots=1, max_seq=64,
+                           kv_layout="contiguous")
+    sched = PreemptiveScheduler(eng, preempt_mode="resident")
+    req = Request(prompt=np.arange(1, 8, dtype=np.int32), max_new=6)
+    sched.submit(req)
+    sched.step()
+    sched.preempt(eng.slots.active_slots()[0])
+    assert sched.swapped[req.rid].spilled      # coerced
+    assert sched.n_spills == 1
+    res = sched.run()
+    assert len(res[req.rid].tokens) == 6
+
+
+@pytest.mark.slow   # compiles prefill+decode per arch
+@pytest.mark.parametrize("arch", [
+    "qwen3-moe-30b-a3b",    # moe routing through resumed pages
+    "deepseek-v3-671b",     # MLA latent cache preempted/resumed
+])
+def test_preempt_resume_every_step_all_families(arch):
+    fam_cfg = f32_cfg(arch)
+    fam_params = T.init_params(jax.random.PRNGKey(0), fam_cfg, max_seq=64)
+    _preempt_resume_sweep(fam_cfg, fam_params, mode="spill", max_new=5)
+
+
+def test_extract_graft_paged_roundtrip(cfg, params):
+    """extract_paged_cache o graft_paged_cache is bit-exact, including
+    relocation to a different set of pages."""
+    eng = ContinuousEngine(cfg, params, n_slots=1, max_seq=64,
+                           kv_layout="paged", page_size=8)
+    req = Request(prompt=np.arange(1, 13, dtype=np.int32), max_new=4)
+    eng.submit(req)
+    eng.step()
+    (slot,) = eng.slots.active_slots()
+    src = eng.slots.states[slot].pages
+    snap = T.extract_paged_cache(eng.slots.cache,
+                                 jnp.asarray(src, jnp.int32))
+    # scatter into different page ids and gather back
+    dst = [p + 3 for p in src]
+    assert set(dst).isdisjoint(src)
+    relocated = T.graft_paged_cache(eng.slots.cache, snap,
+                                    jnp.asarray(dst, jnp.int32))
+    back = T.extract_paged_cache(relocated, jnp.asarray(dst, jnp.int32))
+    for a, b in zip(jax.tree.leaves(snap), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# pool exhaustion x preemption
+# ---------------------------------------------------------------------------
+
+def test_preempt_frees_pages_for_waiting_request(cfg, params):
+    """With the pool full, spilling an active sequence must make its
+    pages claimable by the queued request, and the spilled sequence must
+    re-admit and finish afterwards — no deadlock, no leak."""
+    # pool of 4 pages, every request needs 2: two run, the third waits
+    eng = ContinuousEngine(cfg, params, n_slots=3, max_seq=64,
+                           kv_layout="paged", page_size=16, pool_pages=4)
+    sched = PreemptiveScheduler(eng)
+    rng = np.random.default_rng(0)
+    reqs = [Request(prompt=_prompt(rng, 16, cfg.vocab_size), max_new=9)
+            for _ in range(3)]
+    for r in reqs:
+        sched.submit(r)
+    sched.step()
+    assert len(eng.slots.active_slots()) == 2
+    assert eng.slots.allocator.available() == 0
+    waiting = reqs[2]
+    assert waiting.rid not in eng.results
+
+    victim_slot = eng.slots.active_slots()[0]
+    victim_rid = eng.slots.states[victim_slot].request.rid
+    sched.preempt(victim_slot)                  # spill: pages reclaimable
+    assert eng.slots.allocator.can_reserve(2)
+    sched.step()                                # waiting request admitted
+    active_rids = {eng.slots.states[s].request.rid
+                   for s in eng.slots.active_slots()}
+    assert waiting.rid in active_rids
+    assert victim_rid in sched.swapped
+
+    results = sched.run()                       # victim resumes, all finish
+    assert sorted(results) == sorted(r.rid for r in reqs)
+    for r in reqs:
+        assert len(results[r.rid].tokens) == r.max_new
+    assert results[victim_rid].n_preemptions == 1
+    _assert_drained(eng)
+
+
+def test_preempted_solo_matches_uninterrupted_under_pool_churn(cfg, params):
+    """The spilled sequence's final tokens are those of an uninterrupted
+    run even though its pages were recycled by another request."""
+    want = _solo_tokens(cfg, params,
+                        np.arange(1, 17, dtype=np.int32), 9,
+                        kv_layout="paged", page_size=16)
+    eng = ContinuousEngine(cfg, params, n_slots=2, max_seq=64,
+                           kv_layout="paged", page_size=16, pool_pages=2)
+    sched = PreemptiveScheduler(eng)
+    probe = Request(prompt=np.arange(1, 17, dtype=np.int32), max_new=9)
+    churn = Request(prompt=np.arange(1, 17, dtype=np.int32), max_new=5)
+    sched.submit(probe)
+    sched.step()
+    sched.step()
+    sched.preempt(eng.slots.active_slots()[0])
+    sched.submit(churn)                         # takes the SAME two pages
+    res = sched.run()
+    np.testing.assert_array_equal(res[probe.rid].tokens, want)
+    _assert_drained(eng)
+
+
+def test_release_already_freed_table_raises():
+    """Regression: releasing a block table twice must fail loudly
+    instead of corrupting the pool (a double-released page would later
+    be handed to two live sequences)."""
+    a = BlockAllocator(6)
+    a.reserve(4)
+    table = a.alloc(4)
+    a.release(table)
+    with pytest.raises(PoolExhausted):
+        a.release(table)
+    # the failed release must not have corrupted the free list
+    assert a.in_use == 0 and len(a._free) == 6
+    a.reserve(6)
+    assert sorted(a.alloc(6)) == [1, 2, 3, 4, 5, 6]
+
+
+def test_double_evict_raises(cfg, params):
+    eng = ContinuousEngine(cfg, params, n_slots=1, max_seq=64)
+    eng.submit(Request(prompt=np.arange(1, 5, dtype=np.int32), max_new=4))
+    eng.step()
+    (slot,) = eng.slots.active_slots()
+    st = eng.slots.states[slot]
+    eng.slots.evict(slot)
+    eng.slots.states[slot] = st                 # simulate bookkeeping bug
+    with pytest.raises(PoolExhausted):
+        eng.slots.evict(slot)
+
+
+# ---------------------------------------------------------------------------
+# priority scheduling
+# ---------------------------------------------------------------------------
+
+def test_priority_arrival_preempts_lower_priority(cfg, params):
+    """A high-priority arrival blocked on pages spills the weakest
+    active sequence, runs to completion first, and the victim still
+    finishes with its uninterrupted token stream."""
+    prompt = np.arange(1, 17, dtype=np.int32)
+    want_victim = _solo_tokens(cfg, params, prompt, 9,
+                               kv_layout="paged", page_size=16)
+    eng = ContinuousEngine(cfg, params, n_slots=2, max_seq=64,
+                           kv_layout="paged", page_size=16, pool_pages=2)
+    sched = PreemptiveScheduler(eng)
+    low = Request(prompt=prompt.copy(), max_new=9, priority=0)
+    high = Request(prompt=prompt.copy(), max_new=3, priority=5)
+    sched.submit(low)
+    sched.step()                                # low occupies the whole pool
+    assert eng.slots.allocator.available() == 0
+    sched.submit(high)
+    sched.step()                                # high preempts low
+    assert low.rid in sched.swapped
+    results = sched.run()
+    assert results[high.rid].finished_step < results[low.rid].finished_step
+    assert results[low.rid].n_preemptions == 1
+    np.testing.assert_array_equal(results[low.rid].tokens, want_victim)
+    _assert_drained(eng)
+
+
+def test_equal_priority_never_preempts(cfg, params):
+    eng = ContinuousEngine(cfg, params, n_slots=2, max_seq=64,
+                           kv_layout="paged", page_size=16, pool_pages=2)
+    sched = PreemptiveScheduler(eng)
+    first = Request(prompt=np.arange(1, 17, dtype=np.int32), max_new=6,
+                    priority=1)
+    second = Request(prompt=np.arange(1, 17, dtype=np.int32), max_new=6,
+                     priority=1)
+    sched.submit(first)
+    sched.submit(second)
+    results = sched.run()
+    assert sched.n_preemptions == 0             # FIFO within a priority
+    assert results[first.rid].finished_step <= results[second.rid].finished_step
+
+
+def test_preempt_mode_validation(cfg, params):
+    eng = ContinuousEngine(cfg, params, n_slots=1, max_seq=64)
+    with pytest.raises(ValueError):
+        PreemptiveScheduler(eng, preempt_mode="swap-to-tape")
+
+
+def test_logits_last_present_even_for_prefill_finish(cfg, params):
+    """Regression: the paged place() must carry last_logits through its
+    state rebuild — a max_new==1 request finishes at admission and the
+    confidence gate needs its logits.  For any request, logits_last is
+    the distribution the final token was drawn from."""
+    eng = ContinuousEngine(cfg, params, n_slots=2, max_seq=64)
+    assert eng.kv_layout == "paged"
+    one = Request(prompt=np.arange(1, 9, dtype=np.int32), max_new=1)
+    many = Request(prompt=np.arange(1, 9, dtype=np.int32), max_new=5)
+    results = eng.run([one, many])
+    for req in (one, many):
+        res = results[req.rid]
+        assert res.logits_last is not None
+        assert int(np.argmax(res.logits_last)) == int(res.tokens[-1])
+
+
+def test_resident_swap_outranks_lower_priority_active(cfg, params):
+    """Regression: a blocked RESIDENT swap entry needs only a slot (its
+    pages are still committed), so the priority-preemption feasibility
+    check must use need=0, not its full page budget — otherwise the
+    high-priority sequence waits behind lower-priority work."""
+    want = _solo_tokens(cfg, params, np.arange(1, 17, dtype=np.int32), 8,
+                        kv_layout="paged", page_size=16)
+    eng = ContinuousEngine(cfg, params, n_slots=1, max_seq=64,
+                           kv_layout="paged", page_size=16, pool_pages=3)
+    sched = PreemptiveScheduler(eng)
+    high = Request(prompt=np.arange(1, 17, dtype=np.int32), max_new=8,
+                   priority=5)
+    sched.submit(high)
+    sched.step()
+    sched.preempt(0, "resident")       # pages stay committed (2 of 3)
+    low = Request(prompt=np.arange(1, 17, dtype=np.int32), max_new=8,
+                  priority=0)
+    sched.submit(low)
+    sched.step()                       # high must reclaim the slot at once
+    assert eng.slots.states[0].request.rid == high.rid
+    results = sched.run()
+    assert results[high.rid].finished_step < results[low.rid].finished_step
+    np.testing.assert_array_equal(results[high.rid].tokens, want)
+    _assert_drained(eng)
+
+
+def test_queue_head_of_line_blocks_smaller_later_arrivals(cfg, params):
+    """Regression: within a priority class the queue keeps the engine's
+    FIFO head-of-line discipline — a later, smaller request must not
+    jump a head blocked on pages (that backfill can starve the head
+    under a steady arrival stream)."""
+    eng = ContinuousEngine(cfg, params, n_slots=2, max_seq=64,
+                           kv_layout="paged", page_size=16, pool_pages=4)
+    sched = PreemptiveScheduler(eng)
+    running = Request(prompt=np.arange(1, 17, dtype=np.int32), max_new=9)
+    sched.submit(running)
+    sched.step()                       # holds 2 of 4 pages
+    big = Request(prompt=np.arange(1, 33, dtype=np.int32), max_new=16)
+    small = Request(prompt=np.arange(1, 9, dtype=np.int32), max_new=2)
+    sched.submit(big)                  # head: needs 3 pages, only 2 free
+    sched.submit(small)                # would fit, but must wait for big
+    sched.step()
+    assert {eng.slots.states[s].request.rid
+            for s in eng.slots.active_slots()} == {running.rid}
+    results = sched.run()
+    assert results[big.rid].admitted_step <= results[small.rid].admitted_step
+    assert len(results[big.rid].tokens) == 16
+    _assert_drained(eng)
+
+
+def test_contiguous_blocked_swap_entry_no_crash(cfg, params):
+    """Regression: a swapped-out CONTIGUOUS sequence waiting behind a
+    full slot table must not crash the priority pass (contiguous slot
+    states carry no page budget) — and must still finish exactly."""
+    want = _solo_tokens(cfg, params, np.arange(1, 8, dtype=np.int32), 7,
+                        kv_layout="contiguous")
+    eng = ContinuousEngine(cfg, params, n_slots=1, max_seq=64,
+                           kv_layout="contiguous")
+    sched = PreemptiveScheduler(eng)
+    probe = Request(prompt=np.arange(1, 8, dtype=np.int32), max_new=7)
+    sched.submit(probe)
+    sched.step()
+    sched.preempt(0)                   # coerced to spill
+    other = Request(prompt=np.arange(1, 6, dtype=np.int32), max_new=4)
+    sched.submit(other)
+    results = sched.run()              # probe waits, resumes, finishes
+    np.testing.assert_array_equal(results[probe.rid].tokens, want)
+    assert len(results[other.rid].tokens) == 4
+
+
+def test_blocked_spilled_head_vetoes_fresh_arrivals(cfg, params):
+    """Regression: a spilled sequence blocked on pages must not be
+    starved by same-priority fresh arrivals — the swap head vetoes
+    page-consuming queue admissions while it cannot re-reserve."""
+    eng = ContinuousEngine(cfg, params, n_slots=3, max_seq=64,
+                           kv_layout="paged", page_size=16, pool_pages=5)
+    sched = PreemptiveScheduler(eng)
+    # a: 2 pages, long-running; b: 3 pages (the preemptee)
+    a = Request(prompt=np.arange(1, 17, dtype=np.int32), max_new=17)
+    b = Request(prompt=np.arange(1, 33, dtype=np.int32), max_new=16)
+    sched.submit(a)
+    sched.submit(b)
+    sched.step()                       # pool exhausted: 2 + 3 of 5
+    (b_slot,) = [s for s in eng.slots.active_slots()
+                 if eng.slots.states[s].request.rid == b.rid]
+    sched.preempt(b_slot)              # spill: 3 pages free again
+    c = Request(prompt=np.arange(1, 9, dtype=np.int32), max_new=9)
+    sched.submit(c)                    # 1 page; arrival beats b's resume
+    sched.step()
+    assert b.rid in sched.swapped      # c took a page: b blocked (needs 3)
+    d = Request(prompt=np.arange(1, 9, dtype=np.int32), max_new=2)
+    sched.submit(d)                    # 1 page would fit — must be vetoed
+    sched.step()
+    active = {eng.slots.states[s].request.rid
+              for s in eng.slots.active_slots()}
+    assert d.rid not in active and b.rid in sched.swapped
+    results = sched.run()              # c drains -> b resumes -> d runs
+    for req, n in ((a, 17), (b, 16), (c, 9), (d, 2)):
+        assert len(results[req.rid].tokens) == n
+    assert results[b.rid].n_preemptions == 1
+    _assert_drained(eng)
+
+
+# ---------------------------------------------------------------------------
+# space-ground tiering
+# ---------------------------------------------------------------------------
+
+def test_step_windows_skips_horizon_clipped_passes():
+    """Regression: a pass whose start lies beyond the horizon is clamped
+    by ``windows`` into an inverted (b <= a) tuple — ``step_windows``
+    must drop it rather than fabricate a post-horizon 1-tick window."""
+    for seed in range(8):
+        sched = ContactSchedule(contact_duration_s=480.0,
+                                contacts_per_day=6, seed=seed)
+        horizon = 7200.0
+        for lo, hi in sched.step_windows(1.0, horizon):
+            assert lo < hi
+            assert lo < horizon          # never starts past the horizon
+
+
+def test_space_ground_no_window_records_undelivered(cfg, params):
+    """With no contact window inside the horizon the satellite still
+    answers everything, but the downlink backlog is recorded as
+    undelivered instead of silently dropped, and nothing reaches the
+    ground tier."""
+    trace = [r.clone() for r in _sg_trace(cfg, n=3)]
+    sat = ContinuousEngine(cfg, params, n_slots=2, max_seq=64)
+    gnd = ContinuousEngine(cfg, params, n_slots=2, max_seq=64)
+    sg = SpaceGroundScheduler(
+        sat, gnd,
+        schedule=ContactSchedule(contact_duration_s=480.0,
+                                 contacts_per_day=6, seed=0),
+        gate=ConfidenceGate("max_prob", 2.0),     # would escalate all
+        s_per_step=1.0, horizon_s=100.0)          # ...but no pass fits
+    rep = sg.run(trace)
+    assert rep.windows == []
+    assert sorted(rep.undelivered) == sorted(r.rid for r in trace)
+    assert not rep.escalated and not rep.ground_results
+    for r in trace:                    # satellite answers still stand
+        assert len(rep.tokens[r.rid]) == r.max_new
+    assert rep.ledger.get("bytes_downlinked") == 0
+
+def _sg_setup(cfg, params, *, threshold, seed=1):
+    sat = ContinuousEngine(cfg, params, n_slots=2, max_seq=64)
+    gnd = ContinuousEngine(cfg, params, n_slots=2, max_seq=64)
+    schedule = ContactSchedule(contact_duration_s=8.0,
+                               contacts_per_day=2400, seed=seed)
+    return SpaceGroundScheduler(
+        sat, gnd, schedule=schedule,
+        gate=ConfidenceGate("max_prob", threshold),
+        s_per_step=1.0, horizon_s=7200.0)
+
+
+def _sg_trace(cfg, n=6, seed=8):
+    rng = np.random.default_rng(seed)
+    return [Request(prompt=_prompt(rng, int(rng.integers(4, 12)),
+                                   cfg.vocab_size),
+                    max_new=int(rng.integers(4, 10)),
+                    arrival_t=float(i * 2))
+            for i in range(n)]
+
+
+def test_space_ground_windows_preempt_and_stay_exact(cfg, params):
+    """Contact windows preempt satellite decode mid-flight, yet every
+    satellite answer equals its uninterrupted run — and nothing is
+    escalated below threshold 0 (satellite answers stand)."""
+    trace = _sg_trace(cfg)
+    sg = _sg_setup(cfg, params, threshold=-1.0)   # never escalate
+    rep = sg.run([r.clone() for r in trace])
+    assert rep.n_preemptions >= 1                 # windows actually hit
+    assert not rep.escalated and not rep.ground_results
+    assert sorted(rep.tokens) == sorted(rep.sat_results)
+    # token-exact vs an uninterrupted satellite-only engine
+    ref_eng = ContinuousEngine(cfg, params, n_slots=2, max_seq=64)
+    ref = ref_eng.run([r.clone() for r in trace])
+    for (rid_a, res_a), (rid_b, toks_b) in zip(
+            sorted(ref.items()), sorted(rep.tokens.items())):
+        np.testing.assert_array_equal(toks_b, res_a.tokens)
+    assert rep.ledger.get("energy_compute_j") > 0
+    _assert_drained(sg.sat.engine)
+
+
+def test_space_ground_escalation_routes_to_ground_tier(cfg, params):
+    """Threshold above 1.0 escalates everything: the ground tier
+    re-answers every request during contact windows and the ledger
+    accounts raw-escalation bytes + comm energy."""
+    trace = [r.clone() for r in _sg_trace(cfg)]
+    sg = _sg_setup(cfg, params, threshold=2.0)    # always escalate
+    rep = sg.run(trace)
+    assert sorted(rep.escalated) == sorted(r.rid for r in trace)
+    assert not rep.undelivered
+    assert sorted(rep.ground_results) == sorted(r.rid for r in trace)
+    for rid in rep.escalated:
+        np.testing.assert_array_equal(rep.tokens[rid],
+                                      rep.ground_results[rid].tokens)
+        assert len(rep.tokens[rid]) == len(rep.sat_results[rid].tokens)
+    s = rep.ledger.summary()
+    assert s["escalation_rate"] == 1.0
+    assert s["bytes_raw_escalated"] > 0 and s["energy_comm_j"] > 0
+    assert s["downlink_s"] > 0
+    _assert_drained(sg.sat.engine)
+
+
+@pytest.mark.slow   # compiles the full onboard + ground tiansuan pair
+def test_space_ground_tiansuan_pair_end_to_end():
+    onboard = TP.ONBOARD.with_(param_dtype="float32",
+                               activation_dtype="float32")
+    ground = TP.GROUND.with_(param_dtype="float32",
+                             activation_dtype="float32")
+    sat_p = T.init_params(jax.random.PRNGKey(0), onboard, max_seq=64)
+    gnd_p = T.init_params(jax.random.PRNGKey(1), ground, max_seq=64)
+    rng = np.random.default_rng(3)
+    trace = [Request(prompt=_prompt(rng, 8, onboard.vocab_size), max_new=6,
+                     arrival_t=float(2 * i)) for i in range(4)]
+    sat = ContinuousEngine(onboard, sat_p, n_slots=2, max_seq=64)
+    gnd = ContinuousEngine(ground, gnd_p, n_slots=2, max_seq=64)
+    sg = SpaceGroundScheduler(
+        sat, gnd,
+        schedule=ContactSchedule(contact_duration_s=8.0,
+                                 contacts_per_day=2400, seed=2),
+        gate=ConfidenceGate(TP.CASCADE["confidence_metric"],
+                            TP.SCHEDULER["escalate_threshold"]),
+        s_per_step=1.0, horizon_s=7200.0)
+    rep = sg.run(trace)
+    assert len(rep.tokens) == len(trace)
+    assert not rep.undelivered
+    for rid in rep.escalated:                   # ground answered these
+        assert rid in rep.ground_results
+    _assert_drained(sat)
+    _assert_drained(gnd)
