@@ -1,0 +1,155 @@
+#!/usr/bin/env python
+"""Versioned serving-benchmark gate: every CI assertion on
+``BENCH_serving.json``, checked-in and runnable locally.
+
+    PYTHONPATH=src python -m benchmarks.serving_throughput
+    python scripts/check_bench.py BENCH_serving.json
+
+The serving-bench CI job runs exactly this (``.github/workflows/
+ci.yml``), so the gates are reviewable in diffs instead of living in a
+workflow heredoc.  ``GATE_VERSION`` pairs with the benchmark's
+``bench_version``: bump both when gated keys change, so a stale
+BENCH_serving.json fails loudly instead of silently passing old gates.
+
+Gates:
+  * throughput — paged continuous >= 1.5x fixed-slot tokens/s, paged
+    token-exact with the contiguous layout, paged KV bytes (allocated
+    AND measured peak) strictly below the contiguous reservation;
+  * contact_window — preempt-and-resume token-exact with the
+    uninterrupted run, goodput >= the abort-and-restart baseline,
+    preemptions actually observed (resumes balanced), pools drained;
+  * contact_window.overlap — overlapped goodput >= stop-the-world
+    goodput on the SAME window schedule, decode really ran during
+    passes, delta spills observed with delta bytes < full-spill bytes,
+    both replays token-exact, pools drained, spill store empty.
+
+Each gate prints PASS/FAIL; the exit code is non-zero if any failed.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+GATE_VERSION = 2
+
+
+class Gates:
+    def __init__(self) -> None:
+        self.failures = 0
+
+    def check(self, name: str, ok: bool, detail="") -> None:
+        status = "PASS" if ok else "FAIL"
+        suffix = f"  [{detail}]" if detail != "" else ""
+        print(f"{status}  {name}{suffix}")
+        if not ok:
+            self.failures += 1
+
+
+def check_version(g: Gates, bench: dict) -> None:
+    got = bench.get("bench_version")
+    g.check("bench_version matches gate version", got == GATE_VERSION,
+            f"bench={got} gates={GATE_VERSION}")
+
+
+def check_throughput(g: Gates, bench: dict) -> None:
+    paged = bench["continuous"]
+    contig = bench["continuous_contiguous"]
+    g.check("paged continuous >= 1.5x fixed-slot tokens/s",
+            bench["speedup"] >= 1.5, f"speedup={bench['speedup']}")
+    g.check("paged token-exact with contiguous layout",
+            bench["paged_token_exact"] is True)
+    g.check("continuous run uses the paged layout",
+            paged["kv_layout"] == "paged")
+    # the allocated pool is smaller than the contiguous layout...
+    g.check("paged KV bytes < contiguous KV bytes",
+            paged["kv_cache_bytes"] < contig["kv_cache_bytes"],
+            f"{paged['kv_cache_bytes']} vs {contig['kv_cache_bytes']}")
+    # ...AND measured peak usage stays under the contiguous reservation
+    # (catches page leaks the static pool size hides)
+    peak_positions = paged["peak_pages_in_use"] * paged["page_size"]
+    contig_positions = (bench["trace"]["n_slots"]
+                        * bench["trace"]["max_seq"])
+    g.check("peak paged positions < contiguous reservation",
+            peak_positions < contig_positions,
+            f"{peak_positions} vs {contig_positions}")
+    g.check("page-pool utilization in (0, 1]",
+            0.0 < paged["page_pool_utilization"] <= 1.0,
+            f"{paged['page_pool_utilization']}")
+
+
+def check_contact_window(g: Gates, cw: dict) -> None:
+    pre, res = cw["preemptive"], cw["restart"]
+    g.check("preemptive replay token-exact vs uninterrupted",
+            cw["token_exact_vs_uninterrupted"] is True)
+    # windows really interrupted in-flight sequences
+    g.check("preemptions observed", pre["n_preemptions"] > 0,
+            f"n={pre['n_preemptions']}")
+    g.check("resumes balance preemptions",
+            pre["n_resumes"] == pre["n_preemptions"],
+            f"{pre['n_resumes']} vs {pre['n_preemptions']}")
+    # resume beats redoing the work on the same schedule
+    g.check("preemptive goodput >= restart goodput",
+            cw["goodput_ratio"] >= 1.0, f"ratio={cw['goodput_ratio']}")
+    g.check("useful tokens equal across replays",
+            pre["useful_tokens"] == res["useful_tokens"],
+            f"{pre['useful_tokens']} vs {res['useful_tokens']}")
+    g.check("preemptive pool drained", pre["pool_drained"] is True)
+    g.check("restart pool drained", res["pool_drained"] is True)
+
+
+def check_overlap(g: Gates, ov: dict) -> None:
+    o, stw = ov["overlapped"], ov["stop_the_world"]
+    g.check("overlapped replay token-exact vs uninterrupted",
+            ov["token_exact_vs_uninterrupted"] is True)
+    g.check("stop-the-world replay token-exact vs uninterrupted",
+            ov["stop_the_world_token_exact"] is True)
+    # the tentpole: transmit/compute overlap beats holding the compute
+    # for the whole pass, on the SAME window schedule
+    g.check("overlapped goodput >= stop-the-world goodput",
+            ov["goodput_ratio_vs_stop_the_world"] >= 1.0,
+            f"ratio={ov['goodput_ratio_vs_stop_the_world']}")
+    g.check("decode ticks observed inside windows",
+            o["decode_steps_in_window"] > 0,
+            f"n={o['decode_steps_in_window']}")
+    g.check("stop-the-world never decodes inside windows",
+            stw["decode_steps_in_window"] == 0,
+            f"n={stw['decode_steps_in_window']}")
+    # the KV-delta spill format: re-preempted sequences ship only the
+    # pages dirtied since their last spill
+    g.check("delta spills observed", o["n_delta_spills"] > 0,
+            f"n={o['n_delta_spills']}")
+    g.check("delta-spill bytes < full-spill bytes",
+            ov["delta_spill_bytes"] < ov["full_spill_bytes_equiv"],
+            f"{ov['delta_spill_bytes']} vs {ov['full_spill_bytes_equiv']}")
+    g.check("overlapped resumes balance preemptions",
+            o["n_resumes"] == o["n_preemptions"],
+            f"{o['n_resumes']} vs {o['n_preemptions']}")
+    g.check("overlapped pool drained", o["pool_drained"] is True)
+    g.check("stop-the-world pool drained", stw["pool_drained"] is True)
+    g.check("spill store empty after drain",
+            o["spill_store_empty"] is True)
+
+
+def main(argv) -> int:
+    path = argv[1] if len(argv) > 1 else "BENCH_serving.json"
+    with open(path) as f:
+        bench = json.load(f)
+    g = Gates()
+    check_version(g, bench)
+    if g.failures:
+        # a stale benchmark may predate gated keys entirely: stop at the
+        # version gate instead of dying in a KeyError mid-report
+        print(f"\nFAILED: stale {path} — re-run "
+              "`PYTHONPATH=src python -m benchmarks.serving_throughput` "
+              "before gating")
+        return 1
+    check_throughput(g, bench)
+    check_contact_window(g, bench["contact_window"])
+    check_overlap(g, bench["contact_window"]["overlap"])
+    print(f"\n{'OK' if not g.failures else 'FAILED'}: "
+          f"{g.failures} gate(s) failed ({path}, gate v{GATE_VERSION})")
+    return 1 if g.failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -52,15 +52,21 @@ CASCADE = dict(
 )
 
 # Space-ground scheduling parameters (serving.scheduler): the onboard
-# tier decodes between ground-station passes and yields compute to the
-# downlink during them (paper §II: the Pi runs comm/compression work
-# while a pass is open).  s_per_step is a Pi-class per-token decode
-# latency for the ONBOARD tier; the ground tier is assumed always-on.
+# tier decodes through ground-station passes (overlap=True splits each
+# pass into a transmit lane and a compute lane; the Pi's comm stack
+# only claims comm_reserve_pages of KV for downlink staging, spilling
+# just the sequences whose pages must cover it).  s_per_step is a
+# Pi-class per-token decode latency for the ONBOARD tier; the ground
+# tier is assumed always-on.  overlap=False restores the stop-the-world
+# schedule (every pass preempts all decode — PR 3's behavior).
 SCHEDULER = dict(
     s_per_step=0.35,                  # onboard decode seconds per token
     contact_duration_s=480.0,         # ~8 min LEO pass (ContactSchedule)
     contacts_per_day=6,
     escalate_threshold=0.62,          # cascade gate (CASCADE) reuse
+    overlap=True,                     # transmit/compute lanes share a pass
+    comm_reserve_pages=2,             # KV pages held for downlink staging
+    delta_spill=True,                 # re-spills ship only dirtied pages
 )
 
 CONFIG = GROUND            # default arch when loaded via get_config

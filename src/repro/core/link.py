@@ -104,6 +104,63 @@ class ContactSchedule:
         return out
 
 
+class TransmitLane:
+    """The downlink half of the overlapped contact pipeline.
+
+    A FIFO of queued payloads drained *incrementally* against a per-tick
+    byte budget, so a scheduler can interleave one decode step with one
+    tick of transmission instead of holding the compute for a whole
+    pass.  A payload larger than one tick's budget carries its partial
+    progress across ticks (and across windows — an unfinished head
+    simply waits for the next pass).
+
+    ``tick(budget)`` returns the items whose transmission *completed*
+    this tick, in FIFO order.  Determinism: same enqueues + same budgets
+    => same completion ticks and byte ledger.
+    """
+
+    def __init__(self):
+        self._q: List[list] = []          # [item, remaining_bytes]
+        self.bytes_sent = 0.0
+        self.n_completed = 0
+        self.n_partial_ticks = 0          # ticks ending mid-payload
+
+    def enqueue(self, item, nbytes: float) -> None:
+        self._q.append([item, float(nbytes)])
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def pending_bytes(self) -> float:
+        return sum(rem for _, rem in self._q)
+
+    def pending_items(self) -> List:
+        return [item for item, _ in self._q]
+
+    def clear(self) -> List:
+        """Drop the backlog (horizon exhausted); returns the items."""
+        out = self.pending_items()
+        self._q.clear()
+        return out
+
+    def tick(self, budget_bytes: float) -> List:
+        """Transmit up to ``budget_bytes`` off the FIFO head; returns
+        the items fully delivered this tick."""
+        done = []
+        remaining = float(budget_bytes)
+        while self._q and self._q[0][1] <= remaining:
+            item, nbytes = self._q.pop(0)
+            remaining -= nbytes
+            self.bytes_sent += nbytes
+            self.n_completed += 1
+            done.append(item)
+        if self._q and remaining > 0.0:
+            self._q[0][1] -= remaining
+            self.bytes_sent += remaining
+            self.n_partial_ticks += 1
+        return done
+
+
 def payload_bytes_result(n_items: int, classes: int = 1) -> int:
     """Compact inference result: class id + confidence + bbox-ish tuple
     per item (16 bytes, generous)."""

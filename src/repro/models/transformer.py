@@ -728,13 +728,22 @@ def init_paged_cache(cfg: ModelConfig, n_pages: int, page_size: int) -> dict:
         "(recurrent families keep their fixed-size state path)")
 
 
-def graft_paged_cache(cache: dict, prefix_cache: dict, page_ids) -> dict:
+def graft_paged_cache(cache: dict, prefix_cache: dict, page_ids,
+                      since: int = 0) -> dict:
     """Scatter a single-sequence prefix cache (leaves (L, 1, S_b, ...))
     into pages ``page_ids`` ((n0,) int32) of the paged pool.  The prefix
     is padded/clamped to ``n0 * page_size`` positions, so every written
     page is fully overwritten — positions beyond the true prompt length
     hold prefill padding garbage and stay masked by the per-slot
-    ``kv_len`` exactly as in the contiguous layout."""
+    ``kv_len`` exactly as in the contiguous layout.
+
+    ``since`` (static) skips the first ``since`` entries of ``page_ids``:
+    the delta half of the KV-delta spill format — a re-resumed sequence
+    whose leading pages are already device-resident (or already grafted
+    from a base snapshot) grafts only the pages dirtied since the last
+    spill, and base + delta reassemble token-exactly."""
+    if since:
+        page_ids = page_ids[since:]
     def graft(pool, small):
         ps = pool.shape[2]
         n0 = page_ids.shape[0]
@@ -752,14 +761,21 @@ def graft_paged_cache(cache: dict, prefix_cache: dict, page_ids) -> dict:
     return jax.tree.map(graft, cache, prefix_cache)
 
 
-def extract_paged_cache(cache: dict, page_ids) -> dict:
+def extract_paged_cache(cache: dict, page_ids, since: int = 0) -> dict:
     """Gather pages ``page_ids`` ((n,) int32) of the paged pool back into
     a single-sequence prefix cache (leaves (L, 1, n * page_size, ...)) —
     the exact inverse of ``graft_paged_cache``.  Preemption snapshots a
     live sequence's KV with this, releases its pages, and later resumes
     by grafting the snapshot into freshly allocated pages; because the
     snapshot length is a whole number of pages, the graft pads nothing
-    and the round trip is bit-exact."""
+    and the round trip is bit-exact.
+
+    ``since`` (static) gathers only ``page_ids[since:]`` — the pages
+    dirtied since a previous spill epoch.  Re-preempting a long sequence
+    then ships only its new pages; the host store keeps the clean prefix
+    from the earlier spill (``serving.paging.DeltaSpillStore``)."""
+    if since:
+        page_ids = page_ids[since:]
     def gather(pool):
         sm = pool[:, page_ids]                    # (L, n, ps, ...)
         L, n, ps = sm.shape[:3]

@@ -119,15 +119,19 @@ class RequestQueue:
 
 def poisson_trace(n_requests: int, *, rate: float = 0.5,
                   prompt_lens=(4, 16), max_new=(2, 24),
-                  vocab_size: int = 256, seed: int = 0) -> List[Request]:
+                  vocab_size: int = 256, seed: int = 0,
+                  priorities=(0, 0)) -> List[Request]:
     """A Poisson arrival trace with heterogeneous prompt lengths and
     decode budgets — the workload continuous batching is built for.
 
     rate: mean arrivals per engine decode step; inter-arrival gaps are
-    exponential.  prompt_lens / max_new: inclusive (lo, hi) ranges
-    sampled uniformly.  Returns requests sorted by arrival_t.
+    exponential.  prompt_lens / max_new / priorities: inclusive
+    (lo, hi) ranges sampled uniformly (priorities defaults to all-0 —
+    FIFO, no preemption pressure).  Returns requests sorted by
+    arrival_t.
     """
     rng = np.random.default_rng(seed)
+    sample_prio = tuple(priorities) != (0, 0)
     t = 0.0
     out = []
     for _ in range(n_requests):
@@ -136,5 +140,9 @@ def poisson_trace(n_requests: int, *, rate: float = 0.5,
         out.append(Request(
             prompt=rng.integers(1, vocab_size, S).astype(np.int32),
             max_new=int(rng.integers(max_new[0], max_new[1] + 1)),
-            arrival_t=t))
+            arrival_t=t,
+            # drawn only when asked: the default trace's RNG stream (and
+            # therefore every seeded benchmark workload) stays identical
+            priority=(int(rng.integers(priorities[0], priorities[1] + 1))
+                      if sample_prio else 0)))
     return out

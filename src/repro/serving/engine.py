@@ -284,6 +284,10 @@ class SlotManager(_SlotOccupancy):
 class _PagedSlotState(_SlotState):
     pages: List[int] = field(default_factory=list)   # block table
     budget: int = 0                    # lifetime pages reserved
+    synced_pages: int = 0              # leading pages bit-identical to the
+    #                                    host spill store (KV-delta spills):
+    #                                    decode writes lower the watermark,
+    #                                    a spill/resume raises it
 
 
 class PagedSlotManager(_SlotOccupancy):
@@ -350,14 +354,22 @@ class PagedSlotManager(_SlotOccupancy):
         self.states[slot] = None
 
     # -- preemption (snapshot / detach / restore) ---------------------------
-    def snapshot(self, slot: int):
+    def snapshot(self, slot: int, since: int = 0):
         """Host-side copy of the slot's live pages as a prefix-shaped
         pytree (leaves (L, 1, n_pages * page_size, ...)) — the
         ``extract_paged_cache`` inverse of the admission graft, so
-        restore round-trips bit-exactly through ``graft_paged_cache``."""
+        restore round-trips bit-exactly through ``graft_paged_cache``.
+        ``since`` skips the first ``since`` (clean) pages — the KV-delta
+        spill path, which ships only pages dirtied since the last spill.
+        Returns None when there is nothing newer than ``since``.  The
+        slice happens host-side so the jitted gather is keyed only on
+        the delta's page count, not on (table length, since) pairs."""
         st = self.states[slot]
+        if since >= len(st.pages):
+            return None
         return jax.device_get(
-            self._extract(self.cache, jnp.asarray(st.pages, jnp.int32)))
+            self._extract(self.cache,
+                          jnp.asarray(st.pages[since:], jnp.int32)))
 
     def detach(self, slot: int, *, release_pages: bool) -> _PagedSlotState:
         """Remove the slot's state without finishing it.  With
@@ -396,12 +408,16 @@ class PagedSlotManager(_SlotOccupancy):
     def ensure_write_pages(self) -> None:
         """Grow each active slot's block table to cover its next write
         position.  Draws on the reservation made at admission, so it
-        cannot fail mid-sequence."""
+        cannot fail mid-sequence.  Also lowers the slot's ``synced_pages``
+        watermark to the page this tick writes into — that page now
+        diverges from any host spill copy, so the next spill must ship
+        it again (everything below the watermark stays delta-exempt)."""
         for st in self.states:
             if st is None:
                 continue
             while len(st.pages) <= st.pos // self.page_size:
                 st.pages.extend(self.allocator.alloc(1))
+            st.synced_pages = min(st.synced_pages, st.pos // self.page_size)
 
     def block_tables(self) -> np.ndarray:
         """(n_slots, max_bt) int32 page ids; unused entries point at

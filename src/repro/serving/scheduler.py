@@ -19,12 +19,23 @@ so this module adds:
     sequences; swapped sequences resume highest-priority-first, so
     every admitted request eventually finishes.
   * ``SpaceGroundScheduler`` — drives a (satellite, ground) engine pair
-    (``configs/tiansuan_pair``) against ``ContactSchedule`` windows:
-    satellite decode is preempted for the duration of each pass, the
-    pass's downlink budget transmits finished results (compact) and
-    escalates low-confidence sequences (raw prompt) to the ground tier
-    via the ``ConfidenceGate`` from ``core/cascade``'s deployment, and
-    an ``EnergyModel`` ledger accounts compute vs comm joules.
+    (``configs/tiansuan_pair``) against ``ContactSchedule`` windows.
+    Each pass is an *overlapped pipeline* (``overlap=True``, default):
+    a ``core.link.TransmitLane`` drains the downlink backlog against
+    the pass's per-tick byte budget — finished results compact,
+    low-confidence sequences escalated raw to the ground tier via the
+    ``ConfidenceGate`` from ``core/cascade``'s deployment — while
+    satellite decode CONTINUES through the pass; only the transmit
+    lane's staging reserve (``comm_reserve_pages`` held via
+    ``hold_pages``) can spill sequences.  ``overlap=False`` preempts
+    all decode for each whole pass (the stop-the-world schedule).  An
+    ``EnergyModel`` ledger accounts compute vs comm joules.
+
+Re-preempting a long sequence ships only a KV *delta*: the host-side
+``serving.paging.DeltaSpillStore`` keeps spilled snapshots across
+resumes, the block table tracks a ``synced_pages`` watermark, and
+``extract_paged_cache(..., since=...)`` gathers just the pages dirtied
+since the last spill — base + delta reassemble token-exactly.
 
 Both schedulers are deterministic: same trace + same windows => same
 tokens, preemption points, and ledger.
@@ -39,11 +50,12 @@ import numpy as np
 
 from repro.core.energy import EnergyModel
 from repro.core.gating import ConfidenceGate
-from repro.core.link import ContactSchedule, payload_bytes_raw, \
-    payload_bytes_result
+from repro.core.link import ContactSchedule, TransmitLane, \
+    payload_bytes_raw, payload_bytes_result
 from repro.core.telemetry import Ledger
 from repro.serving.batching import Request
 from repro.serving.engine import ContinuousEngine, RequestResult
+from repro.serving.paging import DeltaSpillStore
 
 
 @dataclass
@@ -79,11 +91,19 @@ class PreemptiveScheduler:
     """
 
     def __init__(self, engine: ContinuousEngine, *,
-                 preempt_mode: str = "spill"):
+                 preempt_mode: str = "spill", delta_spill: bool = True):
         if preempt_mode not in ("spill", "resident"):
             raise ValueError(f"unknown preempt_mode {preempt_mode!r}")
         self.engine = engine
         self.preempt_mode = preempt_mode
+        # KV-delta spills (paged layout only): the host store keeps each
+        # spilled sequence's snapshot across resumes, so a re-preemption
+        # ships only the pages dirtied since — the block table's
+        # ``synced_pages`` watermark — instead of the whole live set
+        self.store: Optional[DeltaSpillStore] = (
+            DeltaSpillStore(engine.slots.page_size)
+            if delta_spill and hasattr(engine.slots, "allocator") else None)
+        self.held_pages = 0             # transmit-lane page hold (overlap)
         self.swapped: Dict[int, SwapEntry] = {}      # rid -> entry
         self.n_preemptions = 0
         self.n_spills = 0
@@ -117,8 +137,17 @@ class PreemptiveScheduler:
         if not hasattr(slots, "allocator"):
             mode = "spill"       # contiguous rows have no resident identity:
             #                      the slot may be regrafted while swapped
-        assert slots.states[slot] is not None, f"slot {slot} empty"
-        kv = slots.snapshot(slot) if mode == "spill" else None
+        st0 = slots.states[slot]
+        assert st0 is not None, f"slot {slot} empty"
+        kv = None
+        if mode == "spill":
+            if self.store is not None:
+                synced = st0.synced_pages
+                delta = slots.snapshot(slot, since=synced)
+                kv = self.store.merge(st0.request.rid, delta, synced,
+                                      len(st0.pages))
+            else:
+                kv = slots.snapshot(slot)
         st = slots.detach(slot, release_pages=mode == "spill")
         st.n_preemptions += 1
         self.swapped[st.request.rid] = SwapEntry(
@@ -136,9 +165,55 @@ class PreemptiveScheduler:
         entry = self.swapped.pop(rid)
         t0 = time.perf_counter()
         self.engine.slots.restore(slot, entry.state, entry.kv)
+        if (entry.kv is not None and self.store is not None
+                and rid in self.store):
+            # every restored page now matches the host store's copy:
+            # raise the watermark so the NEXT spill ships only pages
+            # dirtied from here on (decode lowers it again per write)
+            entry.state.synced_pages = len(entry.state.pages)
         self.resume_s.append(time.perf_counter() - t0)
         self.n_resumes += 1
         self.swapped_steps += self.engine.clock - entry.preempted_step
+
+    # -- transmit-lane page hold (overlapped contact pipeline) ---------------
+    def hold_pages(self, n: int) -> int:
+        """Reserve ``n`` pool pages for a contact window's transmit lane
+        (downlink staging buffers), spilling active sequences — lowest
+        priority first, then the largest block table, so the fewest
+        victims free the most pages — until the hold fits.  Everything
+        not spilled keeps decoding through the pass; the spilled victims
+        resume (token-exactly, via their delta snapshots) once
+        ``release_hold`` returns the pages at window close.  Holds what
+        is actually attainable and returns the total held; idempotent
+        across the in-window ticks of one pass."""
+        slots = self.engine.slots
+        alloc = getattr(slots, "allocator", None)
+        if alloc is None or n <= 0:
+            return 0
+        need = min(n, alloc.n_pages) - self.held_pages
+        if need <= 0:
+            return self.held_pages
+        while alloc.available() < need and slots.any_active():
+            victims = sorted(
+                slots.active_slots(),
+                key=lambda s: (slots.states[s].request.priority,
+                               -len(slots.states[s].pages),
+                               -slots.states[s].request.arrival_t,
+                               slots.states[s].request.rid))
+            self.preempt(victims[0], "spill")
+        take = min(need, alloc.available())
+        if take > 0:
+            alloc.reserve(take)
+            self.held_pages += take
+        return self.held_pages
+
+    def release_hold(self) -> None:
+        """Return the transmit lane's page hold to the pool (window
+        close) — spilled victims become resumable again."""
+        if self.held_pages:
+            self.engine.slots.allocator.release([],
+                                                unreserve=self.held_pages)
+            self.held_pages = 0
 
     # -- the scheduling loop -------------------------------------------------
     def _resume_order(self) -> List[SwapEntry]:
@@ -264,7 +339,11 @@ class PreemptiveScheduler:
             eng._decode_once()
         else:
             eng.clock += 1                     # compute yielded: idle tick
-        return eng.finish_order[before:]
+        finished = eng.finish_order[before:]
+        if self.store is not None:
+            for rid in finished:               # spill history is dead weight
+                self.store.drop(rid)
+        return finished
 
     def run(self, requests: Optional[List[Request]] = None,
             ) -> Dict[int, RequestResult]:
@@ -278,6 +357,9 @@ class PreemptiveScheduler:
 
     def stats(self) -> dict:
         lat = self.resume_s
+        delta = (self.store.stats() if self.store is not None else
+                 {"n_delta_spills": 0, "spill_bytes": 0,
+                  "spill_bytes_full_equiv": 0})
         return {
             "n_preemptions": self.n_preemptions,
             "n_spills": self.n_spills,
@@ -287,6 +369,7 @@ class PreemptiveScheduler:
             else 0.0,
             "resume_latency_s_max": round(float(np.max(lat)), 6) if lat
             else 0.0,
+            **delta,
         }
 
 
@@ -305,20 +388,35 @@ class SpaceGroundReport:
     ledger: Ledger = field(default_factory=Ledger)
     n_preemptions: int = 0
     windows: List[Tuple[int, int]] = field(default_factory=list)
+    sat_stats: dict = field(default_factory=dict)   # PreemptiveScheduler.stats
+    decode_steps_in_window: int = 0     # overlap: decode ticks during passes
 
 
 class SpaceGroundScheduler:
     """Two-tier scheduling between a satellite and a ground engine.
 
-    The satellite engine decodes between ground-station passes; when a
-    pass opens (``ContactSchedule`` quantized to decode ticks via
-    ``step_windows``), every in-flight satellite sequence is preempted
-    for the pass duration and the downlink transmits, in FIFO order and
-    within the pass's byte budget: (a) compact results of confident
-    finished sequences, (b) raw prompts of low-confidence ones — the
-    ``core/cascade`` gate decides which — which the ground engine then
-    re-answers.  The ground tier is always-on (it's on Earth) and steps
-    once per satellite tick.
+    Each ground-station pass (``ContactSchedule`` quantized to decode
+    ticks via ``step_windows``) is split into two lanes:
+
+      * a **transmit lane** (``core.link.TransmitLane``) draining the
+        downlink backlog incrementally against the pass's per-tick byte
+        budget, in FIFO order: (a) compact results of confident finished
+        sequences, (b) raw prompts of low-confidence ones — the
+        ``core/cascade`` gate decides which — which the ground engine
+        then re-answers; and
+      * a **compute lane**: with ``overlap`` (the default) satellite
+        decode *continues through the pass*, interleaved one decode
+        step per transmitted tick.  Only the transmit lane's staging
+        reserve (``comm_reserve_pages`` KV pages held for the pass via
+        ``PreemptiveScheduler.hold_pages``) can force preemption, and
+        only of the sequences whose pages must spill to cover it; the
+        rest never stop.  Spilled victims resume token-exactly after
+        the pass — re-preempted long sequences ship only KV-delta
+        pages.  ``overlap=False`` is PR 3's stop-the-world behavior:
+        every in-flight sequence preempted for the whole pass.
+
+    The ground tier is always-on (it's on Earth) and steps once per
+    satellite tick.
 
     Deterministic: the only clock is the satellite engine's decode tick
     (``s_per_step`` seconds each), so the same trace + schedule replays
@@ -332,8 +430,14 @@ class SpaceGroundScheduler:
                  energy: Optional[EnergyModel] = None,
                  s_per_step: float = 0.35,
                  horizon_s: float = 86_400.0,
-                 preempt_mode: str = "spill"):
-        self.sat = PreemptiveScheduler(sat_engine, preempt_mode=preempt_mode)
+                 preempt_mode: str = "spill",
+                 overlap: bool = True,
+                 comm_reserve_pages: int = 2,
+                 delta_spill: bool = True):
+        self.sat = PreemptiveScheduler(sat_engine, preempt_mode=preempt_mode,
+                                       delta_spill=delta_spill)
+        self.overlap = overlap
+        self.comm_reserve_pages = comm_reserve_pages
         self.ground = ground_engine
         # fresh default instances per scheduler: the models hold mutable
         # dict fields a caller may tune (e.g. energy.subsystem_w)
@@ -364,8 +468,7 @@ class SpaceGroundScheduler:
             self.sat.submit(r)
         by_rid = {r.rid: r for r in requests}
         ground_to_rid: Dict[int, int] = {}
-        backlog: List[Tuple[int, float, bool]] = []  # (rid, bytes, escalate)
-        tx_remaining = 0.0               # byte budget left this tick
+        lane = TransmitLane()            # items: (rid, escalate)
 
         def classify(rid: int) -> None:
             """Queue a finished satellite sequence for downlink."""
@@ -383,31 +486,44 @@ class SpaceGroundScheduler:
             led.add("bytes_raw_escalated", nbytes if esc else 0)
             led.add("bytes_bentpipe_baseline",
                     payload_bytes_raw(1, (res.prompt_len,), 4))
-            backlog.append((rid, float(nbytes), esc))
+            lane.enqueue((rid, esc), nbytes)
+
+        def decode_tick(in_window: bool) -> None:
+            """One compute-lane tick: decode, meter energy, classify."""
+            finished = self.sat.step()
+            if self.sat.engine.slots.any_active() or finished:
+                led.add("energy_compute_j",
+                        self.energy.inference_energy_j(1, self.s_per_step))
+                if in_window:
+                    rep.decode_steps_in_window += 1
+            for rid in finished:
+                classify(rid)
 
         t = self.sat.clock
         while True:
             ground_busy = bool(len(self.ground.queue)
                                or self.ground.slots.any_active())
-            if not (self.sat.has_work() or backlog or ground_busy):
+            if not (self.sat.has_work() or len(lane) or ground_busy):
                 break
             if t >= self.horizon_steps and not (self.sat.has_work()
                                                 or ground_busy):
                 # backlog missed every window: record, don't silently drop
-                rep.undelivered = [rid for rid, _, _ in backlog]
-                backlog.clear()
+                rep.undelivered = [rid for rid, _ in lane.clear()]
                 break
             in_window = self._in_window(t)
             if in_window:
-                # a pass holds the compute: preempt everything in flight
-                self.sat.preempt_all()
-                # ...and spends the tick transmitting the backlog FIFO
-                tx_remaining = self.bytes_per_step
-                tx_active = bool(backlog)
-                while backlog and backlog[0][1] <= tx_remaining:
-                    rid, nbytes, esc = backlog.pop(0)
-                    tx_remaining -= nbytes
-                    led.add("bytes_downlinked", nbytes)
+                if self.overlap:
+                    # compute keeps running: hold only the transmit
+                    # lane's staging reserve, spilling the fewest
+                    # sequences whose pages must cover it
+                    self.sat.hold_pages(self.comm_reserve_pages)
+                else:
+                    # PR 3 stop-the-world: the pass holds the compute
+                    self.sat.preempt_all()
+                # the transmit lane drains this tick's byte budget FIFO
+                tx_active = len(lane) > 0
+                sent_before = lane.bytes_sent
+                for rid, esc in lane.tick(self.bytes_per_step):
                     if esc:
                         rep.escalated.append(rid)
                         src = by_rid[rid]
@@ -416,30 +532,29 @@ class SpaceGroundScheduler:
                                     priority=src.priority)
                         ground_to_rid[g.rid] = rid
                         self.ground.submit(g)
-                if backlog and tx_active:
-                    # partial transmission of the head carries over
-                    rid, nbytes, esc = backlog[0]
-                    backlog[0] = (rid, nbytes - tx_remaining, esc)
-                    led.add("bytes_downlinked", tx_remaining)
                 if tx_active:
+                    led.add("bytes_downlinked", lane.bytes_sent - sent_before)
                     led.add("downlink_s", self.s_per_step)
                     led.add("energy_comm_j",
                             self.energy.comm_energy_j(self.s_per_step))
-                self.sat.step(decode=False)
+                if self.overlap:
+                    decode_tick(True)    # compute lane: same tick
+                else:
+                    self.sat.step(decode=False)
+                    # stop-the-world invariant tripwire: preempt_all
+                    # just ran, so an active slot here means decode
+                    # leaked into the pass — surface it in the metric
+                    # instead of silently reporting 0
+                    if self.sat.engine.slots.any_active():
+                        rep.decode_steps_in_window += 1
             else:
+                self.sat.release_hold()  # window closed: staging pages back
                 if self.sat.has_work():
-                    finished = self.sat.step()
-                    if self.sat.engine.slots.any_active() or finished:
-                        led.add("energy_compute_j",
-                                self.energy.inference_energy_j(
-                                    1, self.s_per_step))
-                    for rid in finished:
-                        classify(rid)
-                elif backlog:
+                    decode_tick(False)
+                elif len(lane):
                     nxt = self._next_window_start(t)
                     if nxt is None:      # no pass left in the horizon
-                        rep.undelivered = [rid for rid, _, _ in backlog]
-                        backlog.clear()
+                        rep.undelivered = [rid for rid, _ in lane.clear()]
                         continue
                     self.sat.engine.clock = nxt     # sleep to the next pass
                     # the ground tier gets the whole inter-pass gap, not
@@ -452,6 +567,7 @@ class SpaceGroundScheduler:
             self.ground.step()           # always-on tier
             t = self.sat.clock
 
+        self.sat.release_hold()          # horizon may end mid-window
         # drain the ground tier (it may still be decoding escalations)
         while len(self.ground.queue) or self.ground.slots.any_active():
             self.ground.step()
@@ -465,4 +581,5 @@ class SpaceGroundScheduler:
             else:
                 rep.tokens[rid] = res.tokens
         rep.n_preemptions = self.sat.n_preemptions
+        rep.sat_stats = self.sat.stats()
         return rep

@@ -228,26 +228,29 @@ def test_allocator_accounting_exact_under_random_ops(n_pages, op_seeds):
 @settings(max_examples=5, deadline=None)
 def test_scheduler_invariants_random_preemption(seed):
     """Random Poisson arrivals with random priorities, random preemption
-    (random slot, random spill/resident mode) injected at random ticks:
-    every admitted request finishes with exactly max_new tokens (no
-    starvation), the allocator's free count is fully restored after the
-    drain (no page leak), and reservation accounting ends exact.
-    Double-free would raise PoolExhausted mid-run."""
+    (random slot, random spill/resident mode) and random transmit-lane
+    page holds injected at random ticks: every admitted request finishes
+    with exactly max_new tokens (no starvation), the allocator's free
+    count is fully restored after the drain (no page leak), reservation
+    accounting ends exact, and the KV-delta spill ledger stays
+    consistent (delta bytes never exceed the full-spill equivalent; the
+    host store drains with the work).  Double-free would raise
+    PoolExhausted mid-run."""
     from repro.serving.batching import poisson_trace
     from repro.serving.engine import ContinuousEngine
     from repro.serving.scheduler import PreemptiveScheduler
     cfg, params = _paged_cfg_params()
     rng = np.random.default_rng(seed)
     trace = poisson_trace(5, rate=0.9, prompt_lens=(2, 12), max_new=(1, 7),
-                          vocab_size=cfg.vocab_size, seed=seed)
-    for r in trace:
-        r.priority = int(rng.integers(0, 3))
+                          vocab_size=cfg.vocab_size, seed=seed,
+                          priorities=(0, 2))
     eng = ContinuousEngine(cfg, params, n_slots=2, max_seq=32,
                            kv_layout="paged", page_size=8)
     sched = PreemptiveScheduler(eng)
     for r in sorted(trace, key=lambda r: r.arrival_t):
         sched.submit(r)
     guard = 0
+    hold_until = -1
     while sched.has_work():
         guard += 1
         assert guard < 500, "scheduler failed to drain (starvation?)"
@@ -256,7 +259,15 @@ def test_scheduler_invariants_random_preemption(seed):
             slot = int(rng.choice(active))
             sched.preempt(slot,
                           "spill" if rng.random() < 0.7 else "resident")
+        if hold_until < 0 and rng.random() < 0.15:
+            # a pass opens: hold a random comm reserve for a few ticks
+            sched.hold_pages(int(rng.integers(1, 6)))
+            hold_until = guard + int(rng.integers(1, 6))
+        if 0 <= hold_until <= guard:
+            sched.release_hold()                    # the pass closes
+            hold_until = -1
         sched.step(decode=bool(rng.random() < 0.9))
+    sched.release_hold()
     results = sched.results
     assert sorted(results) == sorted(r.rid for r in trace)   # no starvation
     by_rid = {r.rid: r for r in trace}
@@ -269,6 +280,63 @@ def test_scheduler_invariants_random_preemption(seed):
     assert len(alloc._free) == alloc.n_pages                # count restored
     assert alloc._free_set == set(alloc._free)              # no double free
     assert sched.n_resumes == sched.n_preemptions
+    # delta-spill ledger invariants
+    s = sched.stats()
+    assert s["n_delta_spills"] <= s["n_spills"] == sched.n_spills
+    assert 0 <= s["spill_bytes"] <= s["spill_bytes_full_equiv"]
+    assert len(sched.store) == 0     # every record dropped at finish
+    assert sched.held_pages == 0
+
+
+# ---------------------------------------------------------------------------
+# KV-delta spill store: merged snapshots match a full-copy reference
+# ---------------------------------------------------------------------------
+
+@given(st.sampled_from([2, 4, 8]),
+       st.lists(st.integers(1, 4), min_size=1, max_size=6),
+       st.integers(0, 2 ** 31 - 1))
+@settings(**SETTINGS)
+def test_delta_store_merge_matches_full_reference(ps, growths, seed):
+    """Random grow/dirty/spill cycles against a mirror array: after
+    every merge the store's reassembled snapshot equals the full
+    reference bit-for-bit, its watermark tracks the live page count,
+    and the byte ledger never claims a delta larger than the full
+    spill."""
+    from repro.serving.paging import DeltaSpillStore
+    rng = np.random.default_rng(seed)
+    store = DeltaSpillStore(ps)
+    ref = {"k": np.zeros((2, 1, 0, 3), np.float32),
+           "v": np.zeros((2, 1, 0, 3), np.float32)}
+    total, synced, rid = 0, 0, 7
+    for g in growths:
+        # grow g fresh pages, and dirty every page from a random point
+        # at or below the current watermark (decode writes move the
+        # watermark down; growth appends above it)
+        w = int(rng.integers(0, synced + 1))
+        grown = {k: np.concatenate(
+            [a, np.zeros((2, 1, g * ps, 3), np.float32)], axis=2)
+            for k, a in ref.items()}
+        total += g
+        for k, a in grown.items():
+            a[:, :, w * ps:] = rng.standard_normal(
+                (2, 1, (total - w) * ps, 3))
+        ref = grown
+        delta = {k: a[:, :, w * ps:] for k, a in ref.items()}
+        merged = store.merge(rid, delta, w, total)
+        for k in ref:
+            np.testing.assert_array_equal(merged[k], ref[k])
+        assert store.synced_pages(rid) == total
+        synced = total
+    assert store.bytes_spilled <= store.bytes_full_equiv
+    assert store.n_spills == len(growths)
+    # a re-spill with nothing dirtied ships zero new bytes
+    before = store.bytes_spilled
+    merged = store.merge(rid, None, total, total)
+    for k in ref:
+        np.testing.assert_array_equal(merged[k], ref[k])
+    assert store.bytes_spilled == before
+    store.drop(rid)
+    assert rid not in store and len(store) == 0
 
 
 # ---------------------------------------------------------------------------

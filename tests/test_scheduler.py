@@ -13,7 +13,7 @@ import pytest
 
 from repro.configs import tiansuan_pair as TP
 from repro.core.gating import ConfidenceGate
-from repro.core.link import ContactSchedule
+from repro.core.link import ContactSchedule, TransmitLane
 from repro.models import transformer as T
 from repro.serving.batching import Request
 from repro.serving.engine import ContinuousEngine
@@ -158,6 +158,210 @@ def test_extract_graft_paged_roundtrip(cfg, params):
     back = T.extract_paged_cache(relocated, jnp.asarray(dst, jnp.int32))
     for a, b in zip(jax.tree.leaves(snap), jax.tree.leaves(back)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_extract_graft_since_reassembles_base_plus_delta(cfg, params):
+    """The KV-delta spill format at the cache level: a base snapshot
+    plus a ``since``-delta grafted over fresh pages reassemble the
+    exact live cache."""
+    eng = ContinuousEngine(cfg, params, n_slots=1, max_seq=64,
+                           kv_layout="paged", page_size=8, pool_pages=8)
+    req = Request(prompt=np.arange(1, 13, dtype=np.int32), max_new=8)
+    eng.submit(req)
+    eng.step()
+    (slot,) = eng.slots.active_slots()
+    base_pages = list(eng.slots.states[slot].pages)       # 2 pages
+    base = jax.device_get(T.extract_paged_cache(
+        eng.slots.cache, jnp.asarray(base_pages, jnp.int32)))
+    while len(eng.slots.states[slot].pages) < 3:          # grow + dirty
+        eng.step()
+    pages = list(eng.slots.states[slot].pages)
+    full = T.extract_paged_cache(eng.slots.cache,
+                                 jnp.asarray(pages, jnp.int32))
+    # page 0 was never rewritten after the base snapshot: ship pages 1+
+    delta = T.extract_paged_cache(eng.slots.cache,
+                                  jnp.asarray(pages, jnp.int32), 1)
+    for d, f in zip(jax.tree.leaves(delta), jax.tree.leaves(full)):
+        np.testing.assert_array_equal(np.asarray(d),
+                                      np.asarray(f)[:, :, 8:])
+    # reassemble into disjoint destination pages: base first, delta over
+    dst = [p + 4 for p in pages]
+    assert set(dst).isdisjoint(pages)
+    pool = T.graft_paged_cache(eng.slots.cache, base,
+                               jnp.asarray(dst[:2], jnp.int32))
+    pool = T.graft_paged_cache(pool, delta, jnp.asarray(dst, jnp.int32), 1)
+    back = T.extract_paged_cache(pool, jnp.asarray(dst, jnp.int32))
+    for a, b in zip(jax.tree.leaves(full), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# KV-delta spills: re-preemption across windows
+# ---------------------------------------------------------------------------
+
+def test_re_preemption_second_spill_is_delta_only(cfg, params):
+    """preempt -> resume -> preempt again: the second spill ships only
+    the pages dirtied since the first (strictly fewer bytes than a full
+    spill), and the twice-resumed stream stays token-exact."""
+    prompt = np.arange(1, 13, dtype=np.int32)
+    want = _solo_tokens(cfg, params, prompt, 20,
+                        kv_layout="paged", page_size=8)
+    eng = ContinuousEngine(cfg, params, n_slots=2, max_seq=64,
+                           kv_layout="paged", page_size=8)
+    sched = PreemptiveScheduler(eng)
+    probe = Request(prompt=prompt.copy(), max_new=20)
+    sched.submit(probe)
+    for _ in range(3):
+        sched.step()
+    (slot,) = eng.slots.active_slots()
+    sched.preempt(slot)
+    first = sched.stats()
+    assert first["n_spills"] == 1 and first["n_delta_spills"] == 0
+    assert first["spill_bytes"] == first["spill_bytes_full_equiv"] > 0
+    sched.step(decode=False)           # one idle window tick
+    for _ in range(4):
+        sched.step()                   # resume + decode past the watermark
+    (slot,) = eng.slots.active_slots()
+    sched.preempt(slot)                # second spill: delta only
+    second = sched.stats()
+    assert second["n_delta_spills"] == 1
+    delta_bytes = second["spill_bytes"] - first["spill_bytes"]
+    full_bytes = (second["spill_bytes_full_equiv"]
+                  - first["spill_bytes_full_equiv"])
+    assert 0 < delta_bytes < full_bytes
+    res = sched.run()
+    np.testing.assert_array_equal(res[probe.rid].tokens, want)
+    assert res[probe.rid].n_preemptions == 2
+    assert len(sched.store) == 0       # spill history dropped at finish
+    _assert_drained(eng)
+
+
+def test_re_preempt_every_step_stays_exact(cfg, params):
+    """Re-preemption sweep: spill at every step k, resume, spill again
+    two steps later — every doubly-interrupted stream matches the
+    uninterrupted run, and every second spill is a delta."""
+    max_new = 8
+    rng = np.random.default_rng(11)
+    prompt = _prompt(rng, 9, cfg.vocab_size)
+    want = _solo_tokens(cfg, params, prompt, max_new,
+                        kv_layout="paged", page_size=8)
+    eng = ContinuousEngine(cfg, params, n_slots=2, max_seq=64,
+                           kv_layout="paged", page_size=8)
+    sched = PreemptiveScheduler(eng)
+    n_probes = max_new - 3
+    for k in range(n_probes):
+        probe = Request(prompt=prompt.copy(), max_new=max_new)
+        sched.submit(probe)
+        sched.step(decode=False)       # pure clock tick keeps runs aligned
+        sched._admit_by_priority()     # admission without a decode step
+        for _ in range(k):
+            sched.step()
+        (slot,) = [s for s in eng.slots.active_slots()
+                   if eng.slots.states[s].request.rid == probe.rid]
+        sched.preempt(slot)            # spill 1: full
+        sched.step()                   # resume + decode
+        sched.step()
+        (slot,) = [s for s in eng.slots.active_slots()
+                   if eng.slots.states[s].request.rid == probe.rid]
+        sched.preempt(slot)            # spill 2: delta
+        res = sched.run()
+        np.testing.assert_array_equal(res[probe.rid].tokens, want)
+        assert res[probe.rid].n_preemptions == 2
+        _assert_drained(eng)
+    stats = sched.stats()
+    assert stats["n_spills"] == 2 * n_probes
+    assert stats["n_delta_spills"] == n_probes
+    assert stats["spill_bytes"] < stats["spill_bytes_full_equiv"]
+    assert len(sched.store) == 0
+
+
+def test_delta_spill_disabled_keeps_exactness(cfg, params):
+    """delta_spill=False falls back to one-shot full snapshots (no host
+    store) and stays token-exact across re-preemption."""
+    prompt = np.arange(1, 13, dtype=np.int32)
+    want = _solo_tokens(cfg, params, prompt, 12,
+                        kv_layout="paged", page_size=8)
+    eng = ContinuousEngine(cfg, params, n_slots=2, max_seq=64,
+                           kv_layout="paged", page_size=8)
+    sched = PreemptiveScheduler(eng, delta_spill=False)
+    assert sched.store is None
+    probe = Request(prompt=prompt.copy(), max_new=12)
+    sched.submit(probe)
+    for _ in range(2):
+        sched.step()
+    sched.preempt(eng.slots.active_slots()[0])
+    sched.step()
+    sched.step()
+    sched.preempt(eng.slots.active_slots()[0])
+    res = sched.run()
+    np.testing.assert_array_equal(res[probe.rid].tokens, want)
+    assert sched.stats()["spill_bytes"] == 0      # nothing metered
+    _assert_drained(eng)
+
+
+# ---------------------------------------------------------------------------
+# transmit lane + comm-reserve page hold (overlapped contact pipeline)
+# ---------------------------------------------------------------------------
+
+def test_transmit_lane_incremental_drain():
+    """FIFO payloads drain against per-tick budgets; a payload larger
+    than one tick's budget carries partial progress across ticks."""
+    lane = TransmitLane()
+    lane.enqueue("a", 100)
+    lane.enqueue("b", 50)
+    lane.enqueue("c", 300)
+    assert lane.tick(120) == ["a"]     # 20 spare bytes start on b
+    assert lane.pending_bytes() == 330
+    assert lane.tick(30) == ["b"]      # b's carryover completes exactly
+    assert lane.tick(100) == []        # c mid-flight
+    assert lane.tick(200) == ["c"]
+    assert lane.bytes_sent == 450
+    assert lane.n_completed == 3 and len(lane) == 0
+    lane.enqueue("d", 10)
+    assert lane.clear() == ["d"] and len(lane) == 0
+
+
+def test_hold_pages_spills_only_what_the_reserve_needs(cfg, params):
+    """The comm reserve spills the fewest sequences that cover it (the
+    largest block table first); everything else keeps decoding through
+    the window and the spilled victim resumes token-exactly after
+    release."""
+    prompt_big = np.arange(1, 17, dtype=np.int32)
+    want_big = _solo_tokens(cfg, params, prompt_big, 16,
+                            kv_layout="paged", page_size=8)
+    eng = ContinuousEngine(cfg, params, n_slots=3, max_seq=64,
+                           kv_layout="paged", page_size=8, pool_pages=8)
+    sched = PreemptiveScheduler(eng)
+    big = Request(prompt=prompt_big.copy(), max_new=16)     # 4-page budget
+    small = Request(prompt=np.arange(1, 9, dtype=np.int32),
+                    max_new=8)                              # 2-page budget
+    sched.submit(big)
+    sched.submit(small)
+    sched.step()
+    assert len(eng.slots.active_slots()) == 2
+    held = sched.hold_pages(4)         # available()==2: must spill ONE
+    assert held == 4
+    assert big.rid in sched.swapped    # largest table picked
+    assert small.rid not in sched.swapped
+    assert sched.hold_pages(4) == 4    # idempotent within a pass
+    for _ in range(3):
+        sched.step()                   # small keeps decoding in-window
+        assert {eng.slots.states[s].request.rid
+                for s in eng.slots.active_slots()} == {small.rid}
+    sched.release_hold()
+    res = sched.run()
+    np.testing.assert_array_equal(res[big.rid].tokens, want_big)
+    assert len(res[small.rid].tokens) == 8
+    assert res[big.rid].n_preemptions == 1
+    _assert_drained(eng)
+
+
+def test_hold_pages_contiguous_layout_is_noop(cfg, params):
+    eng = ContinuousEngine(cfg, params, n_slots=2, max_seq=64,
+                           kv_layout="contiguous")
+    sched = PreemptiveScheduler(eng)
+    assert sched.hold_pages(4) == 0    # no pool: nothing to hold
+    sched.release_hold()               # must not raise
 
 
 # ---------------------------------------------------------------------------
@@ -458,7 +662,7 @@ def test_space_ground_no_window_records_undelivered(cfg, params):
         assert len(rep.tokens[r.rid]) == r.max_new
     assert rep.ledger.get("bytes_downlinked") == 0
 
-def _sg_setup(cfg, params, *, threshold, seed=1):
+def _sg_setup(cfg, params, *, threshold, seed=1, **kw):
     sat = ContinuousEngine(cfg, params, n_slots=2, max_seq=64)
     gnd = ContinuousEngine(cfg, params, n_slots=2, max_seq=64)
     schedule = ContactSchedule(contact_duration_s=8.0,
@@ -466,7 +670,7 @@ def _sg_setup(cfg, params, *, threshold, seed=1):
     return SpaceGroundScheduler(
         sat, gnd, schedule=schedule,
         gate=ConfidenceGate("max_prob", threshold),
-        s_per_step=1.0, horizon_s=7200.0)
+        s_per_step=1.0, horizon_s=7200.0, **kw)
 
 
 def _sg_trace(cfg, n=6, seed=8):
@@ -479,13 +683,16 @@ def _sg_trace(cfg, n=6, seed=8):
 
 
 def test_space_ground_windows_preempt_and_stay_exact(cfg, params):
-    """Contact windows preempt satellite decode mid-flight, yet every
-    satellite answer equals its uninterrupted run — and nothing is
-    escalated below threshold 0 (satellite answers stand)."""
+    """Stop-the-world schedule (overlap=False, PR 3 semantics): contact
+    windows preempt satellite decode mid-flight, yet every satellite
+    answer equals its uninterrupted run — and nothing is escalated
+    below threshold 0 (satellite answers stand)."""
     trace = _sg_trace(cfg)
-    sg = _sg_setup(cfg, params, threshold=-1.0)   # never escalate
+    sg = _sg_setup(cfg, params, threshold=-1.0,   # never escalate
+                   overlap=False)
     rep = sg.run([r.clone() for r in trace])
     assert rep.n_preemptions >= 1                 # windows actually hit
+    assert rep.decode_steps_in_window == 0        # compute fully yielded
     assert not rep.escalated and not rep.ground_results
     assert sorted(rep.tokens) == sorted(rep.sat_results)
     # token-exact vs an uninterrupted satellite-only engine
@@ -496,6 +703,64 @@ def test_space_ground_windows_preempt_and_stay_exact(cfg, params):
         np.testing.assert_array_equal(toks_b, res_a.tokens)
     assert rep.ledger.get("energy_compute_j") > 0
     _assert_drained(sg.sat.engine)
+
+
+def test_space_ground_overlap_decodes_through_passes(cfg, params):
+    """The overlapped pipeline (default): satellite decode continues
+    through contact windows, answers stay token-exact with the
+    uninterrupted run, and the replay drains no later than the
+    stop-the-world schedule on the same windows."""
+    trace = _sg_trace(cfg)
+    sg_ov = _sg_setup(cfg, params, threshold=-1.0)
+    rep_ov = sg_ov.run([r.clone() for r in trace])
+    sg_stw = _sg_setup(cfg, params, threshold=-1.0, overlap=False)
+    rep_stw = sg_stw.run([r.clone() for r in trace])
+    assert rep_ov.decode_steps_in_window > 0      # compute lane ran in-pass
+    assert rep_stw.decode_steps_in_window == 0
+    assert sg_ov.sat.clock <= sg_stw.sat.clock    # overlap drains no later
+    ref_eng = ContinuousEngine(cfg, params, n_slots=2, max_seq=64)
+    ref = ref_eng.run([r.clone() for r in trace])
+    for (_, res_a), (_, toks_b) in zip(
+            sorted(ref.items()), sorted(rep_ov.tokens.items())):
+        np.testing.assert_array_equal(toks_b, res_a.tokens)
+    s = rep_ov.sat_stats
+    assert s["n_resumes"] == s["n_preemptions"]
+    assert s["spill_bytes"] <= s["spill_bytes_full_equiv"]
+    assert len(sg_ov.sat.store) == 0              # spill history cleaned up
+    assert sg_ov.sat.held_pages == 0              # reserve returned
+    _assert_drained(sg_ov.sat.engine)
+
+
+def test_space_ground_overlap_comm_reserve_forces_delta_spills(cfg, params):
+    """A contended pool + dense passes: the comm reserve must spill the
+    same long sequence across several windows; re-spills are deltas and
+    every answer still matches the uninterrupted run."""
+    rng = np.random.default_rng(5)
+    trace = [Request(prompt=_prompt(rng, 12, cfg.vocab_size),
+                     max_new=18, arrival_t=float(i)) for i in range(3)]
+    ref_eng = ContinuousEngine(cfg, params, n_slots=2, max_seq=64,
+                               page_size=8, pool_pages=9)
+    ref = ref_eng.run([r.clone() for r in trace])
+
+    sat = ContinuousEngine(cfg, params, n_slots=2, max_seq=64,
+                           page_size=8, pool_pages=9)
+    gnd = ContinuousEngine(cfg, params, n_slots=2, max_seq=64)
+    sg = SpaceGroundScheduler(
+        sat, gnd,
+        schedule=ContactSchedule(contact_duration_s=4.0,
+                                 contacts_per_day=8640, seed=3),
+        gate=ConfidenceGate("max_prob", -1.0),    # never escalate
+        s_per_step=1.0, horizon_s=7200.0,
+        comm_reserve_pages=4)
+    rep = sg.run([r.clone() for r in trace])
+    s = rep.sat_stats
+    assert rep.n_preemptions >= 2                 # reserve forced spills
+    assert s["n_delta_spills"] >= 1               # ...and re-spills deltas
+    assert s["spill_bytes"] < s["spill_bytes_full_equiv"]
+    for (_, res_a), (_, toks_b) in zip(
+            sorted(ref.items()), sorted(rep.tokens.items())):
+        np.testing.assert_array_equal(toks_b, res_a.tokens)
+    _assert_drained(sat)
 
 
 def test_space_ground_escalation_routes_to_ground_tier(cfg, params):
