@@ -45,6 +45,17 @@ under a denser window schedule twice:
 CI gates: overlapped goodput >= stop-the-world goodput on the SAME
 schedule, delta spills observed with delta bytes < full-spill bytes,
 both replays token-exact with the uninterrupted run, pools drained.
+
+The CHUNKED-PREFILL replay (``chunked_prefill``) serves a heavy-tail
+prompt mix (mostly short prompts, a fat tail near max_seq) through the
+unified token-budget step twice: budgeted (``PREFILL_BUDGET`` prompt
+tokens per tick) vs unbounded (each prompt lands as one chunk — the
+monolithic comparator).  Every tick is wall-timed; the section reports
+``tick_latency_p50/p99`` and TTFT.  CI gates: the runs are token-exact,
+the chunked run's p99 tick latency is STRICTLY below the monolithic
+run's on the same trace, per-tick prefill tokens never exceed the
+budget, and both pools drain.
+
 The gates live in ``scripts/check_bench.py`` (run it locally after the
 benchmark: ``python scripts/check_bench.py BENCH_serving.json``).
 
@@ -69,7 +80,7 @@ CW_PERIOD = 40              # decode ticks between window opens
 CW_DURATION = 8             # ticks per window (gap > max max_new so the
                             # restart baseline cannot livelock)
 CW_MAX_STEPS = 20_000       # replay safety valve
-BENCH_VERSION = 2           # bumped when gated keys change (check_bench)
+BENCH_VERSION = 3           # bumped when gated keys change (check_bench)
 
 # overlap replay: denser passes (so long sequences straddle several and
 # re-preemption exercises the KV-delta format) + a staging reserve that
@@ -80,6 +91,22 @@ OV_RESERVE_PAGES = 8        # pages held for the transmit lane per pass
                             # (2/3 of the default 12-page pool: enough
                             # contention that long sequences re-spill
                             # across passes and exercise delta spills)
+
+# chunked-prefill replay: a HEAVY-TAIL prompt mix (mostly short prompts
+# with a fat tail of near-max_seq ones) served twice — with the unified
+# step's prefill budget bounding every tick, and with the budget
+# removed (each prompt lands as ONE chunk: the monolithic comparator).
+# The tail is what the gate is about: a monolithic admission stalls the
+# whole tick for the prompt length, so its tail tick latency blows up
+# while the chunked run's stays near the decode floor.
+HT_N_REQUESTS = 16
+HT_MAX_SEQ = 512
+HT_RATE = 0.35              # arrivals per tick (slower: long decodes)
+HT_LIGHT_PROMPTS = (4, 16)
+HT_HEAVY_PROMPTS = (360, 480)
+HT_HEAVY_EVERY = 4          # every 4th request draws from the heavy tail
+HT_MAX_NEW = (4, 16)
+PREFILL_BUDGET = 16         # per-tick prompt-token budget (chunked run)
 
 
 def _make_engine_inputs():
@@ -196,7 +223,7 @@ def _serve_restart(cfg, params, trace):
                 eng.queue.requeue_front(st.request)   # redo from prefill
                 n_aborts += 1
                 wasted_tokens += len(st.emitted)
-            eng.clock += 1                            # pass holds the compute
+            eng._idle_tick()                          # pass holds the compute
         else:
             eng.step()
         if eng.clock > CW_MAX_STEPS:
@@ -332,6 +359,99 @@ def _contact_window_report(cfg, params, trace, reference_tokens):
     }
 
 
+def _heavy_tail_trace(cfg):
+    """Poisson arrivals with a heavy-tail prompt-length mix: every
+    ``HT_HEAVY_EVERY``-th request carries a near-max_seq prompt."""
+    from repro.serving.batching import Request
+
+    rng = np.random.default_rng(23)
+    t, out = 0.0, []
+    for i in range(HT_N_REQUESTS):
+        t += float(rng.exponential(1.0 / HT_RATE))
+        lens = (HT_HEAVY_PROMPTS if i % HT_HEAVY_EVERY == HT_HEAVY_EVERY - 1
+                else HT_LIGHT_PROMPTS)
+        S = int(rng.integers(lens[0], lens[1] + 1))
+        out.append(Request(
+            prompt=rng.integers(1, cfg.vocab_size, S).astype(np.int32),
+            max_new=int(rng.integers(HT_MAX_NEW[0], HT_MAX_NEW[1] + 1)),
+            arrival_t=t))
+    return out
+
+
+def _serve_budgeted(cfg, params, trace, budget):
+    """Replay the heavy-tail trace through one engine, timing EVERY
+    unified-step tick.  budget=None is the monolithic comparator (whole
+    prompts land in a single chunk, stalling their tick)."""
+    from repro.serving.engine import ContinuousEngine
+
+    eng = ContinuousEngine(cfg, params, n_slots=N_SLOTS, max_seq=HT_MAX_SEQ,
+                           kv_layout="paged", page_size=PAGE_SIZE,
+                           prefill_budget_tokens=budget)
+    by_rid = {}
+    for r in sorted(trace, key=lambda r: r.arrival_t):
+        eng.submit(r)
+        by_rid[r.rid] = r
+    import jax
+
+    tick_s = []
+    max_prefill = 0
+    while len(eng.queue) or eng.slots.any_active():
+        t0 = time.perf_counter()
+        eng.step()
+        # async dispatch would bill a tick's model work to whichever
+        # later tick first syncs on a result — block so each tick's
+        # latency is its own
+        jax.block_until_ready(eng.slots.cache)
+        tick_s.append(time.perf_counter() - t0)
+        max_prefill = max(max_prefill, eng.last_tick_prefill_tokens)
+    results = eng.results
+    tokens = [results[k].tokens for k in sorted(results)]
+    ttft = [results[r.rid].first_token_step - r.arrival_t
+            for r in by_rid.values()]
+    lat = np.asarray(tick_s)
+    alloc = eng.slots.allocator
+    return {
+        "n_ticks": len(tick_s),
+        "useful_tokens": int(sum(len(t) for t in tokens)),
+        "tick_latency_p50_s": round(float(np.percentile(lat, 50)), 6),
+        "tick_latency_p99_s": round(float(np.percentile(lat, 99)), 6),
+        "tick_latency_max_s": round(float(lat.max()), 6),
+        "ttft_mean_steps": round(float(np.mean(ttft)), 2),
+        "ttft_p99_steps": round(float(np.percentile(ttft, 99)), 2),
+        "max_prefill_tokens_per_tick": int(max_prefill),
+        "pool_drained": alloc.in_use == 0 and alloc.reserved == 0,
+    }, tokens
+
+
+def _chunked_prefill_report(cfg, params):
+    """Chunked (budgeted) vs monolithic (unbounded) unified step on the
+    SAME heavy-tail trace: token-exact, with the chunked run's tail tick
+    latency strictly below the monolithic run's."""
+    trace = _heavy_tail_trace(cfg)
+    runs = {}
+    tokens = {}
+    for name, budget in (("chunked", PREFILL_BUDGET), ("monolithic", None)):
+        _serve_budgeted(cfg, params, _clone(trace), budget)   # warm jit
+        runs[name], tokens[name] = _serve_budgeted(cfg, params,
+                                                   _clone(trace), budget)
+    return {
+        "trace": {"n_requests": HT_N_REQUESTS, "max_seq": HT_MAX_SEQ,
+                  "light_prompts": list(HT_LIGHT_PROMPTS),
+                  "heavy_prompts": list(HT_HEAVY_PROMPTS),
+                  "heavy_every": HT_HEAVY_EVERY,
+                  "prefill_budget_tokens": PREFILL_BUDGET},
+        "chunked": runs["chunked"],
+        "monolithic": runs["monolithic"],
+        "token_exact": (len(tokens["chunked"]) == len(tokens["monolithic"])
+                        and all(np.array_equal(a, b)
+                                for a, b in zip(tokens["chunked"],
+                                                tokens["monolithic"]))),
+        "tick_p99_ratio": round(
+            runs["chunked"]["tick_latency_p99_s"]
+            / max(runs["monolithic"]["tick_latency_p99_s"], 1e-12), 4),
+    }
+
+
 def run():
     import jax
     from repro.models import transformer as T
@@ -380,6 +500,7 @@ def run():
     cw["overlap"] = _overlap_report(cfg, params, trace,
                                     tokens_seen["continuous"])
     out["contact_window"] = cw
+    out["chunked_prefill"] = _chunked_prefill_report(cfg, params)
     out["bench_version"] = BENCH_VERSION
     rows.append(("serving_contact_window_preemptive",
                  cw["preemptive"]["wall_s"] * 1e6
@@ -397,6 +518,14 @@ def run():
                   "delta_spill_bytes": ov["delta_spill_bytes"],
                   "full_spill_bytes_equiv": ov["full_spill_bytes_equiv"],
                   "token_exact": ov["token_exact_vs_uninterrupted"]}))
+    cp = out["chunked_prefill"]
+    rows.append(("serving_chunked_prefill_tick_p99",
+                 cp["chunked"]["tick_latency_p99_s"] * 1e6,
+                 {"tick_p99_ratio": cp["tick_p99_ratio"],
+                  "monolithic_p99_us": round(
+                      cp["monolithic"]["tick_latency_p99_s"] * 1e6, 1),
+                  "token_exact": cp["token_exact"],
+                  "ttft_mean_steps": cp["chunked"]["ttft_mean_steps"]}))
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     with open(os.path.join(root, "BENCH_serving.json"), "w") as f:
         json.dump(out, f, indent=2, sort_keys=True)

@@ -21,7 +21,13 @@ Gates:
   * contact_window.overlap — overlapped goodput >= stop-the-world
     goodput on the SAME window schedule, decode really ran during
     passes, delta spills observed with delta bytes < full-spill bytes,
-    both replays token-exact, pools drained, spill store empty.
+    both replays token-exact, pools drained, spill store empty;
+  * chunked_prefill — the unified token-budget step on the heavy-tail
+    prompt mix: chunked token-exact with the monolithic (unbounded)
+    run, chunked p99 tick latency STRICTLY below monolithic on the
+    same trace, per-tick prefill tokens bounded by the budget (and the
+    monolithic run genuinely unbounded — the comparator is real),
+    pools drained.
 
 Each gate prints PASS/FAIL; the exit code is non-zero if any failed.
 """
@@ -30,7 +36,7 @@ from __future__ import annotations
 import json
 import sys
 
-GATE_VERSION = 2
+GATE_VERSION = 3
 
 
 class Gates:
@@ -130,6 +136,29 @@ def check_overlap(g: Gates, ov: dict) -> None:
             o["spill_store_empty"] is True)
 
 
+def check_chunked_prefill(g: Gates, cp: dict) -> None:
+    ch, mono = cp["chunked"], cp["monolithic"]
+    budget = cp["trace"]["prefill_budget_tokens"]
+    g.check("chunked run token-exact with monolithic prefill",
+            cp["token_exact"] is True)
+    # the tentpole: bounding every tick's prefill tokens bounds the
+    # tail tick latency — the p99 tick must be strictly faster than the
+    # monolithic run's on the SAME heavy-tail trace
+    g.check("chunked tick p99 < monolithic tick p99",
+            ch["tick_latency_p99_s"] < mono["tick_latency_p99_s"],
+            f"{ch['tick_latency_p99_s']}s vs {mono['tick_latency_p99_s']}s")
+    g.check("per-tick prefill tokens bounded by the budget",
+            0 < ch["max_prefill_tokens_per_tick"] <= budget,
+            f"{ch['max_prefill_tokens_per_tick']} vs budget {budget}")
+    # the comparator really is monolithic: some tick swallowed a whole
+    # heavy prompt in one chunk
+    g.check("monolithic run exceeded the budget in one tick",
+            mono["max_prefill_tokens_per_tick"] > budget,
+            f"{mono['max_prefill_tokens_per_tick']} vs budget {budget}")
+    g.check("chunked pool drained", ch["pool_drained"] is True)
+    g.check("monolithic pool drained", mono["pool_drained"] is True)
+
+
 def main(argv) -> int:
     path = argv[1] if len(argv) > 1 else "BENCH_serving.json"
     with open(path) as f:
@@ -146,6 +175,7 @@ def main(argv) -> int:
     check_throughput(g, bench)
     check_contact_window(g, bench["contact_window"])
     check_overlap(g, bench["contact_window"]["overlap"])
+    check_chunked_prefill(g, bench["chunked_prefill"])
     print(f"\n{'OK' if not g.failures else 'FAILED'}: "
           f"{g.failures} gate(s) failed ({path}, gate v{GATE_VERSION})")
     return 1 if g.failures else 0

@@ -59,6 +59,9 @@ CASCADE = dict(
 # Pi-class per-token decode latency for the ONBOARD tier; the ground
 # tier is assumed always-on.  overlap=False restores the stop-the-world
 # schedule (every pass preempts all decode — PR 3's behavior).
+# prefill_budget_tokens bounds EVERY onboard tick (the engine's unified
+# token-budget step chunks arriving prompts), so a long uplinked prompt
+# can never freeze a pass's transmit lane for its whole length.
 SCHEDULER = dict(
     s_per_step=0.35,                  # onboard decode seconds per token
     contact_duration_s=480.0,         # ~8 min LEO pass (ContactSchedule)
@@ -67,6 +70,8 @@ SCHEDULER = dict(
     overlap=True,                     # transmit/compute lanes share a pass
     comm_reserve_pages=2,             # KV pages held for downlink staging
     delta_spill=True,                 # re-spills ship only dirtied pages
+    prefill_budget_tokens=16,         # ContinuousEngine chunked-prefill
+    #                                   budget: per-tick prompt tokens
 )
 
 CONFIG = GROUND            # default arch when loaded via get_config

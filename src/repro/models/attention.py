@@ -296,6 +296,54 @@ def attention_decode(p: dict, cfg: ModelConfig, x, cache_k, cache_v,
     return out, cache_k, cache_v
 
 
+def _chunk_page_targets(pos_offset, C, n_valid, page_size, block_table):
+    """Scatter targets for one prefill chunk: position ``pos_offset + i``
+    lands in page ``bt[pos // page_size]`` at offset ``pos % page_size``;
+    pad positions (``i >= n_valid`` — chunk shapes are bucketed for jit
+    reuse) land on the scratch page 0, which no live sequence reads."""
+    pos = pos_offset + jnp.arange(C, dtype=jnp.int32)
+    valid = jnp.arange(C) < n_valid
+    page = jnp.where(valid, block_table.reshape(-1)[pos // page_size], 0)
+    return pos, page, pos % page_size
+
+
+def paged_prefill_attention(p: dict, cfg: ModelConfig, x, pool_k, pool_v,
+                            pos_offset, n_valid, block_tables, *,
+                            window: int = 0):
+    """One prompt chunk of a single sequence, straight into the paged
+    KV pool — the admission path of the unified token-budget step.
+
+    x: (1, C, d) chunk activations (positions ``pos_offset ..
+    pos_offset + C``, of which the first ``n_valid`` are real prompt
+    tokens and the rest jit-bucketing pads).  pool_k/pool_v:
+    (n_pages, page_size, Hkv, D) — the layer's slice of the global
+    pool.  block_tables: (1, max_pages) int32 covering at least
+    positions [0, pos_offset + n_valid).
+
+    Each position's k/v is scattered into its absolute-position page
+    (pads to the scratch page 0), then the chunk's queries attend
+    causally over the gathered page set via ``chunked_attention``'s
+    ``q_offset``/``kv_len`` masking — numerically the paged decode
+    path applied C positions at a time, so no contiguous prefix cache
+    (and no graft) ever exists."""
+    B, C, _ = x.shape
+    ps = pool_k.shape[1]
+    q, k, v = _project_qkv(p, cfg, x)
+    pos, page, off = _chunk_page_targets(pos_offset, C, n_valid, ps,
+                                         block_tables)
+    posv = jnp.broadcast_to(pos[None], (B, C))
+    q = L.apply_rope(q, posv, cfg.rope_theta)
+    k = L.apply_rope(k, posv, cfg.rope_theta)
+    pool_k = pool_k.at[page, off].set(k[0].astype(pool_k.dtype))
+    pool_v = pool_v.at[page, off].set(v[0].astype(pool_v.dtype))
+    kg = pool_k[block_tables.reshape(-1)].reshape(1, -1, *pool_k.shape[2:])
+    vg = pool_v[block_tables.reshape(-1)].reshape(1, -1, *pool_v.shape[2:])
+    o = chunked_attention(q, kg, vg, causal=True, q_offset=pos_offset,
+                          window=window, kv_len=pos_offset + n_valid)
+    out = o.reshape(B, C, -1) @ p["w_o"]
+    return out, pool_k, pool_v
+
+
 def paged_attention_decode(p: dict, cfg: ModelConfig, x, pool_k, pool_v,
                            pos, block_tables, *, window: int = 0,
                            rope: bool = True, rope_pos=None):
@@ -431,13 +479,14 @@ def mla_decode(p: dict, cfg: ModelConfig, x, cache_ckv, cache_krope, pos):
 
 
 def _mla_absorbed_attend(p, cfg, q_nope, q_rope, ckv_seq, krope_seq, valid):
-    """Absorbed MLA attention core.  q_nope/q_rope: (B,1,H,*);
-    ckv_seq: (B,S,r); krope_seq: (B,S,rope_d); valid: (B,S) bool.
-    Returns the flattened per-head context (B, 1, H*v_head_dim) in f32
-    (the caller applies w_o)."""
+    """Absorbed MLA attention core.  q_nope/q_rope: (B,Sq,H,*);
+    ckv_seq: (B,S,r); krope_seq: (B,S,rope_d); valid: (B,S) bool
+    (broadcast over queries) or (B,Sq,S) per-query (the chunked-prefill
+    causal mask).  Returns the flattened per-head context
+    (B, Sq, H*v_head_dim) in f32 (the caller applies w_o)."""
     m = cfg.mla
     H = cfg.n_heads
-    B = q_nope.shape[0]
+    B, Sq = q_nope.shape[:2]
     # absorb w_uk into q: (B,1,H,nope) x (lora,H,nope) -> (B,1,H,lora)
     w_uk = p["w_uk"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
     q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope.astype(jnp.float32),
@@ -448,12 +497,41 @@ def _mla_absorbed_attend(p, cfg, q_nope, q_rope, ckv_seq, krope_seq, valid):
     s_rope = jnp.einsum("bqhd,bkd->bhqk", q_rope.astype(jnp.float32),
                         krope_seq.astype(jnp.float32))
     s = (s_lat + s_rope) * scale
-    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    mask = (valid[:, None, None, :] if valid.ndim == 2
+            else valid[:, None, :, :])
+    s = jnp.where(mask, s, NEG_INF)
     prob = jax.nn.softmax(s, axis=-1)
     ctx = jnp.einsum("bhqk,bkr->bqhr", prob, ckv_seq.astype(jnp.float32))
     w_uv = p["w_uv"].reshape(m.kv_lora_rank, H, m.v_head_dim)
     o = jnp.einsum("bqhr,rhd->bqhd", ctx, w_uv.astype(jnp.float32))
-    return o.reshape(B, 1, -1)
+    return o.reshape(B, Sq, -1)
+
+
+def mla_paged_prefill(p: dict, cfg: ModelConfig, x, pool_ckv, pool_krope,
+                      pos_offset, n_valid, block_tables):
+    """One prompt chunk straight into the paged MLA latent cache (see
+    ``paged_prefill_attention`` for the chunk/page layout): the chunk's
+    (ckv, k_rope) land in their absolute-position pages, pads on the
+    scratch page, and attention runs the absorbed decode path with a
+    per-query causal mask — C positions at a time."""
+    B, C, _ = x.shape
+    ps = pool_ckv.shape[1]
+    pos, page, off = _chunk_page_targets(pos_offset, C, n_valid, ps,
+                                         block_tables)
+    posv = jnp.broadcast_to(pos[None], (B, C))
+    q_nope, q_rope, ckv, k_rope = _mla_qkv(p, cfg, x, posv)
+    pool_ckv = pool_ckv.at[page, off].set(ckv[0].astype(pool_ckv.dtype))
+    pool_krope = pool_krope.at[page, off].set(
+        k_rope[0].astype(pool_krope.dtype))
+    bt = block_tables.reshape(-1)
+    ckv_seq = pool_ckv[bt].reshape(1, -1, pool_ckv.shape[-1])
+    krope_seq = pool_krope[bt].reshape(1, -1, pool_krope.shape[-1])
+    kv_pos = jnp.arange(ckv_seq.shape[1])
+    valid = ((kv_pos[None, None, :] <= pos[None, :, None])
+             & (kv_pos[None, None, :] < pos_offset + n_valid))
+    out = _mla_absorbed_attend(p, cfg, q_nope, q_rope, ckv_seq,
+                               krope_seq, valid).astype(x.dtype)
+    return out @ p["w_o"], pool_ckv, pool_krope
 
 
 def mla_paged_decode(p: dict, cfg: ModelConfig, x, pool_ckv, pool_krope,

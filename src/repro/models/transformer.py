@@ -907,6 +907,100 @@ def _xlstm_decode(params, cfg, x, cache):
 
 
 # ==========================================================================
+# chunked prefill into the paged cache (unified token-budget step)
+# ==========================================================================
+
+def _attn_block_prefill_chunk(p, cfg, x, cache, pos_offset, n_valid,
+                              block_tables, *, window=0, moe_capacity=None):
+    """Prefill-chunk step for an attention block: the chunk's KV goes
+    straight into the block's slice of the paged pool (no contiguous
+    prefix cache exists at any point).  Returns (x, new_cache, aux)
+    where aux is the MoE overflow count under ``moe_capacity`` (0 for
+    dense blocks / unbounded capacity)."""
+    eps = cfg.norm_eps
+    h_in = L.norm(p["ln1"], x, eps)
+    if cfg.mla is not None:
+        a, ckv, krope = A.mla_paged_prefill(p["attn"], cfg, h_in,
+                                            cache["ckv"], cache["krope"],
+                                            pos_offset, n_valid, block_tables)
+        new_cache = {"ckv": ckv, "krope": krope}
+    else:
+        a, k, v = A.paged_prefill_attention(p["attn"], cfg, h_in,
+                                            cache["k"], cache["v"],
+                                            pos_offset, n_valid, block_tables,
+                                            window=window)
+        new_cache = {"k": k, "v": v}
+    x = x + a
+    aux = jnp.zeros((), F32)
+    h = L.norm(p["ln2"], x, eps)
+    if "moe" in p:
+        # serving path: drop-free routing; a bounded capacity reports
+        # overflow through aux so the engine can retry with a larger one
+        y, aux = M.moe_fwd(p["moe"], cfg, h, dispatch="einsum",
+                           drop_free=True, capacity=moe_capacity)
+    elif "b_up" in p.get("mlp", {}):
+        y = L.gelu_mlp(p["mlp"], h)
+    else:
+        y = L.swiglu(p["mlp"], h)
+    return x + y, new_cache, aux
+
+
+def prefill_chunk(params: dict, cfg: ModelConfig, cache: dict, tokens,
+                  n_valid, pos_offset, block_tables, *,
+                  moe_capacity=None) -> Tuple[jax.Array, jax.Array, dict]:
+    """One prompt chunk of a single sequence, written DIRECTLY into the
+    paged KV pool — the admission contract of the unified token-budget
+    step (dense / moe incl. MLA; recurrent families keep monolithic
+    prefill on their contiguous state).
+
+    tokens: (1, C) int32 — chunk positions ``[pos_offset, pos_offset+C)``
+    of the prompt, of which the first ``n_valid`` (dynamic) are real and
+    the rest are jit-bucketing pads whose KV lands on the scratch page.
+    cache: an ``init_paged_cache`` pool.  block_tables: (1, max_pages)
+    int32 covering at least positions [0, pos_offset + n_valid).
+
+    Returns (logits (1, C, V), moe_overflow, new_cache).  The caller
+    takes ``logits[0, n_valid-1]`` of the final chunk as the first
+    emitted token's distribution; ``moe_overflow`` is nonzero when
+    ``moe_capacity`` dropped routings (the engine doubles and retries —
+    the same dynamic-capacity discipline as monolithic serving
+    prefill, applied per chunk)."""
+    fam = cfg.family
+    if fam not in ("dense", "moe"):
+        raise NotImplementedError(
+            f"chunked paged prefill unsupported for family {cfg.family!r} "
+            "(recurrent families keep their monolithic prefill path)")
+    window = cfg.sliding_window
+    x = L.embed(params["embed"], tokens)
+    aux_total = jnp.zeros((), F32)
+    new_cache: dict = {}
+
+    def scan_chunk(x, aux_total, stack_params, stack_cache):
+        def body(carry, inp):
+            xc, aux = carry
+            lp, lc = inp
+            xn, nc, a = _attn_block_prefill_chunk(
+                lp, cfg, xc, lc, pos_offset, n_valid, block_tables,
+                window=window, moe_capacity=moe_capacity)
+            return (xn, aux + a), nc
+        (x, aux_total), nc = jax.lax.scan(body, (x, aux_total),
+                                          (stack_params, stack_cache))
+        return x, aux_total, nc
+
+    if fam == "dense":
+        x, aux_total, new_cache["blocks"] = scan_chunk(
+            x, aux_total, params["blocks"], cache["blocks"])
+    else:
+        if "blocks_dense" in params:
+            x, aux_total, new_cache["blocks_dense"] = scan_chunk(
+                x, aux_total, params["blocks_dense"], cache["blocks_dense"])
+        x, aux_total, new_cache["blocks_moe"] = scan_chunk(
+            x, aux_total, params["blocks_moe"], cache["blocks_moe"])
+    x = L.norm(params["final_norm"], x, cfg.norm_eps)
+    return _lm_logits(params, cfg, x), aux_total, new_cache
+
+
+# ==========================================================================
 # prefill convenience
 # ==========================================================================
 

@@ -37,6 +37,12 @@ class Request:
     rid: int = field(default_factory=lambda: next(_ids))
     arrival_t: float = 0.0                # engine-clock steps
     priority: int = 0                     # higher preempts lower (scheduler)
+    prefill_pos: int = 0                  # prompt tokens already chunked
+    #                                       into the KV cache (the unified
+    #                                       token-budget step admits prompts
+    #                                       chunk-by-chunk; preempt/resume
+    #                                       continues from here, and a
+    #                                       redo-from-prefill resets it)
 
     def pages_needed(self, page_size: int) -> int:
         """Worst-case KV pages over the request's lifetime: the cache
@@ -47,7 +53,8 @@ class Request:
 
     def clone(self) -> "Request":
         """Fresh-rid copy for replaying the same workload through
-        another engine (benchmark/test A-B comparisons)."""
+        another engine (benchmark/test A-B comparisons); prefill
+        progress does not carry over."""
         return Request(prompt=self.prompt.copy(), max_new=self.max_new,
                        arrival_t=self.arrival_t, priority=self.priority)
 
@@ -99,8 +106,10 @@ class RequestQueue:
 
     def requeue_front(self, req: Request) -> None:
         """Put an already-admitted request back at the head (abort /
-        redo-from-prefill); deliberately exempt from the capacity check
-        — the request's slot was already granted once."""
+        redo-from-prefill — any partial-prefill progress is discarded
+        with the KV that held it); deliberately exempt from the capacity
+        check — the request's slot was already granted once."""
+        req.prefill_pos = 0
         self._q.appendleft(req)
 
     def next_batch(self) -> Optional[Batch]:

@@ -6,12 +6,18 @@ Two engines share the model's cache layout contract:
     request is padded to the longest prompt and the whole batch drains
     before the next one starts.  The satellite tier serves small
     batches (latency/power bound); fine there.
-  * ``ContinuousEngine`` — continuous batching for the throughput-bound
-    ground tier: requests are prefilled individually, grafted into
-    whichever slot is free, and all active slots step together through
-    ONE jit-compiled decode step with per-slot position vectors.
-    Finished sequences are evicted immediately so queued arrivals join
-    mid-flight instead of waiting for a batch to drain.
+  * ``ContinuousEngine`` — continuous batching driven by ONE *unified
+    token-budget step*: every tick runs a mixed batch of (a) up to
+    ``prefill_budget_tokens`` prefill-chunk tokens for admitting
+    (PREFILLING) sequences and (b) one decode token per DECODING slot,
+    so no tick runs more than ``budget + n_slots`` real tokens of
+    model work (jit bucketing may round a chunk's executed width up to
+    the next power of two — a constant per-engine factor, and exact
+    for the default power-of-two budget) — a long arriving prompt can
+    no longer stall in-flight decodes (or a contact pass's transmit
+    lane) for its whole length.  Finished sequences are evicted
+    immediately so queued arrivals join mid-flight instead of waiting
+    for a batch to drain.
 
 The continuous engine's KV memory comes in two layouts:
 
@@ -20,10 +26,18 @@ The continuous engine's KV memory comes in two layouts:
     growable block table, so memory scales with
     ``sum_i ceil(len_i/page_size)`` instead of ``n_slots * max_seq`` and
     admission blocks on page exhaustion rather than slot count.
+    Admission reserves the lifetime page budget but copies NOTHING:
+    prompt chunks are written straight into incrementally allocated
+    pages by ``models.transformer.prefill_chunk`` — the old
+    whole-prompt prefill + template graft path is gone.
   * ``SlotManager`` (recurrent hybrid/ssm, and the memory baseline):
     one contiguous ``(n_slots, ..., max_seq, ...)`` cache row per slot.
+    Recurrent prefix state integrates every input position, so these
+    families keep monolithic prefill-at-admission (grafted into the
+    slot row); their ticks are bounded by the family's fixed state
+    size, not by prompt length chunking.
 
-MoE serving prefill uses a *dynamic* per-batch expert-capacity bound:
+MoE serving prefill uses a *dynamic* per-chunk expert-capacity bound:
 it starts near the mean load and doubles on overflow (reported through
 the aux channel) until no routing is dropped — token-exact with the
 static drop-free worst case (``C = G``) at a fraction of the dispatch
@@ -44,6 +58,19 @@ from repro.models import transformer as T
 from repro.serving.batching import Request, RequestQueue
 from repro.serving.paging import (BlockAllocator, default_pool_pages,
                                   pages_for)
+
+# Jitted engine callables shared across engine instances serving the
+# same (hashable, frozen) ModelConfig: benchmark A/B replays and test
+# sweeps construct many short-lived engines, and per-instance lambdas
+# would recompile identical programs every time.
+_JIT_CACHE: Dict[tuple, object] = {}
+
+
+def _cached_jit(key: tuple, make):
+    fn = _JIT_CACHE.get(key)
+    if fn is None:
+        fn = _JIT_CACHE[key] = make()
+    return fn
 
 
 def _dynamic_capacity_prefill(prefill_fn, cfg: ModelConfig, n_tok: int):
@@ -86,15 +113,16 @@ class ServingEngine:
         self.cfg = cfg
         self.params = params
         self.max_seq = max_seq
-        self._prefill = jax.jit(
-            lambda p, b: T.prefill(p, cfg, b))
-        self._prefill_cap = jax.jit(
+        self._prefill = _cached_jit(("fixed_prefill", cfg), lambda: jax.jit(
+            lambda p, b: T.prefill(p, cfg, b)))
+        self._prefill_cap = _cached_jit(("fixed_prefill_cap", cfg),
+                                        lambda: jax.jit(
             lambda p, b, cap: T.forward(p, cfg, b, moe_drop_free=True,
                                         moe_capacity=cap, return_cache=True,
                                         remat=False),
-            static_argnums=(2,))
-        self._decode = jax.jit(
-            lambda p, c, t, pos: T.decode_step(p, cfg, c, t, pos))
+            static_argnums=(2,)))
+        self._decode = _cached_jit(("fixed_decode", cfg), lambda: jax.jit(
+            lambda p, c, t, pos: T.decode_step(p, cfg, c, t, pos)))
 
     def _moe_prefill(self, batch):
         n_tok = int(np.prod(batch["tokens"].shape))
@@ -163,8 +191,18 @@ class RequestResult:
     prompt_len: int
     admitted_step: int                 # engine clock at admission
     finished_step: int = 0
+    first_token_step: int = 0          # clock when the prefill completed
+    #                                    and the first token was emitted
     n_preemptions: int = 0             # times swapped out mid-decode
     logits_last: Optional[np.ndarray] = None   # (V,) final-step logits
+
+
+# lifecycle phases of a slot-resident sequence: PREFILLING sequences are
+# still streaming prompt chunks into the cache (no token emitted yet —
+# they contribute prefill-chunk tokens to the unified step, not decode
+# tokens); DECODING sequences step one token per tick.
+PREFILLING = "prefill"
+DECODING = "decode"
 
 
 @dataclass
@@ -174,6 +212,8 @@ class _SlotState:
     next_tok: int                      # last emitted token (next decode input)
     emitted: List[int] = field(default_factory=list)
     admitted_step: int = 0
+    first_token_step: int = 0          # clock at prefill completion
+    phase: str = DECODING              # PREFILLING | DECODING
     n_preemptions: int = 0
     last_logits: Optional[np.ndarray] = None   # (V,) set at admission and
     #                                            finish (confidence routing)
@@ -189,23 +229,32 @@ class _SlotOccupancy:
     def active_slots(self) -> List[int]:
         return [i for i, s in enumerate(self.states) if s is not None]
 
+    def decoding_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.states)
+                if s is not None and s.phase == DECODING]
+
+    def prefilling_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.states)
+                if s is not None and s.phase == PREFILLING]
+
     def any_active(self) -> bool:
         return any(s is not None for s in self.states)
 
     # -- batched decode inputs --------------------------------------------
     def decode_inputs(self):
         """(tokens (n_slots, 1) int32, pos (n_slots,) int32).  Inactive
-        slots feed a dummy token at position 0 of a cache region no live
-        sequence reads (their own private cache row here; the scratch
-        page in the paged layout), leaving live garbage there.  That is
-        safe ONLY because admission rewrites positions [0, prefix)
-        before the slot is read again and everything past a slot's
-        ``kv_len`` is masked — any layout must preserve this
-        overwrite-before-read guarantee."""
+        and PREFILLING slots feed a dummy token at position 0 of a cache
+        region no live sequence reads (their own private cache row here;
+        the scratch page in the paged layout — ``block_tables`` maps
+        non-decoding rows entirely to the scratch page), leaving live
+        garbage there.  That is safe ONLY because admission rewrites
+        positions [0, prefix) before the slot is read again and
+        everything past a slot's ``kv_len`` is masked — any layout must
+        preserve this overwrite-before-read guarantee."""
         toks = np.zeros((self.n_slots, 1), np.int32)
         pos = np.zeros((self.n_slots,), np.int32)
         for i, s in enumerate(self.states):
-            if s is not None:
+            if s is not None and s.phase == DECODING:
                 toks[i, 0] = s.next_tok
                 pos[i] = s.pos
         return toks, pos
@@ -267,7 +316,8 @@ class SlotManager(_SlotOccupancy):
     def can_restore(self, state: _SlotState, spilled: bool) -> bool:
         return True
 
-    def restore(self, slot: int, state: _SlotState, kv=None) -> None:
+    def restore(self, slot: int, state: _SlotState, kv=None, *,
+                spilled: bool = True) -> None:
         """Re-place a detached sequence; ``kv`` is a ``snapshot`` pytree
         (required here: the row may have been reused since detach)."""
         assert self.states[slot] is None, f"slot {slot} occupied"
@@ -296,13 +346,15 @@ class PagedSlotManager(_SlotOccupancy):
     The cache is ``models.transformer.init_paged_cache(cfg, n_pages + 1,
     page_size)`` — page 0 is the scratch page inactive slots write to.
     Admission reserves a request's worst-case lifetime page count
-    (``ceil((prompt + max_new - 1)/page_size)``) so decode can never
-    stall mid-sequence, scatters the prefix cache into freshly
-    allocated prompt pages, and grows the block table one page per
-    ``page_size`` decode steps; eviction returns pages plus any unused
-    reservation to the free list.  Stale KV in recycled pages beyond a
-    slot's ``kv_len`` stays masked until overwritten — the same
-    overwrite-before-read guarantee as the contiguous layout.
+    (``ceil((prompt + max_new - 1)/page_size)``) so neither prefill nor
+    decode can ever stall mid-sequence, but allocates NO pages and
+    copies NO cache: the sequence opens in the PREFILLING state and
+    prompt chunks land directly in pages drawn chunk-by-chunk against
+    the reservation (``grow_for_chunk``).  Decode grows the block table
+    one page per ``page_size`` steps; eviction returns pages plus any
+    unused reservation to the free list.  Stale KV in recycled pages
+    beyond a slot's ``kv_len`` stays masked until overwritten — the
+    same overwrite-before-read guarantee as the contiguous layout.
     """
 
     def __init__(self, cfg: ModelConfig, n_slots: int, max_seq: int, *,
@@ -331,21 +383,30 @@ class PagedSlotManager(_SlotOccupancy):
         """Whether the request could EVER be admitted (pool capacity)."""
         return self._lifetime_pages(req) <= self.allocator.n_pages
 
-    def place(self, slot: int, prefix_cache, state: _SlotState) -> None:
+    def place_prefilling(self, slot: int, req: Request, clock: int) -> None:
+        """Open ``slot`` in the PREFILLING state: reserve the request's
+        worst-case lifetime page budget (admission control is unchanged)
+        but allocate nothing — prompt chunks allocate their pages as
+        they land (``grow_for_chunk``), and no prefix cache is ever
+        grafted."""
         assert self.states[slot] is None, f"slot {slot} occupied"
-        req = state.request
-        budget = self._lifetime_pages(req)
-        self.allocator.reserve(budget)
-        pages = self.allocator.alloc(
-            pages_for(len(req.prompt), self.page_size))
-        self.cache = self._graft(self.cache, prefix_cache,
-                                 jnp.asarray(pages, jnp.int32))
         self.states[slot] = _PagedSlotState(
-            request=req, pos=state.pos, next_tok=state.next_tok,
-            emitted=state.emitted, admitted_step=state.admitted_step,
-            n_preemptions=state.n_preemptions,
-            last_logits=state.last_logits,
-            pages=pages, budget=budget)
+            request=req, pos=req.prefill_pos, next_tok=0,
+            admitted_step=clock, phase=PREFILLING,
+            budget=self._lifetime_pages(req))
+        self.allocator.reserve(self.states[slot].budget)
+
+    def grow_for_chunk(self, slot: int, n_positions: int) -> None:
+        """Allocate pages (against the admission reservation) so the
+        slot's block table covers prompt positions [0, n_positions),
+        and lower the ``synced_pages`` watermark to the first page this
+        chunk writes into — those pages now diverge from any host spill
+        copy."""
+        st = self.states[slot]
+        first_write = st.pos // self.page_size
+        while len(st.pages) * self.page_size < n_positions:
+            st.pages.extend(self.allocator.alloc(1))
+        st.synced_pages = min(st.synced_pages, first_write)
 
     def evict(self, slot: int) -> None:
         st = self.states[slot]
@@ -392,16 +453,23 @@ class PagedSlotManager(_SlotOccupancy):
         discipline as first admission."""
         return (not spilled) or self.allocator.can_reserve(state.budget)
 
-    def restore(self, slot: int, state: _PagedSlotState, kv=None) -> None:
+    def restore(self, slot: int, state: _PagedSlotState, kv=None, *,
+                spilled: bool = True) -> None:
+        """Re-place a detached sequence.  ``spilled`` re-reserves the
+        lifetime budget (the detach released it); ``kv`` is the host
+        snapshot to graft into freshly allocated pages — None for a
+        resident swap, or for a sequence preempted before its first
+        prefill chunk landed (nothing to restore: chunks redo)."""
         assert self.states[slot] is None, f"slot {slot} occupied"
-        if kv is not None:                     # spilled: realloc + graft back
-            leaf = jax.tree.leaves(kv)[0]
-            n = leaf.shape[2] // self.page_size
+        if spilled:
             self.allocator.reserve(state.budget)
-            state.pages = self.allocator.alloc(n)
-            self.cache = self._graft(self.cache,
-                                     jax.tree.map(jnp.asarray, kv),
-                                     jnp.asarray(state.pages, jnp.int32))
+            if kv is not None:                 # realloc + graft back
+                leaf = jax.tree.leaves(kv)[0]
+                n = leaf.shape[2] // self.page_size
+                state.pages = self.allocator.alloc(n)
+                self.cache = self._graft(self.cache,
+                                         jax.tree.map(jnp.asarray, kv),
+                                         jnp.asarray(state.pages, jnp.int32))
         self.states[slot] = state
 
     # -- paged decode plumbing ---------------------------------------------
@@ -411,21 +479,33 @@ class PagedSlotManager(_SlotOccupancy):
         cannot fail mid-sequence.  Also lowers the slot's ``synced_pages``
         watermark to the page this tick writes into — that page now
         diverges from any host spill copy, so the next spill must ship
-        it again (everything below the watermark stays delta-exempt)."""
+        it again (everything below the watermark stays delta-exempt).
+        PREFILLING slots are skipped: their pages grow chunk-by-chunk
+        through ``grow_for_chunk``."""
         for st in self.states:
-            if st is None:
+            if st is None or st.phase != DECODING:
                 continue
             while len(st.pages) <= st.pos // self.page_size:
                 st.pages.extend(self.allocator.alloc(1))
             st.synced_pages = min(st.synced_pages, st.pos // self.page_size)
 
     def block_tables(self) -> np.ndarray:
-        """(n_slots, max_bt) int32 page ids; unused entries point at
-        the scratch page 0."""
+        """(n_slots, max_bt) int32 page ids for the DECODE sub-batch;
+        unused entries — and whole rows of inactive or PREFILLING slots,
+        whose dummy decode write must not touch their real pages —
+        point at the scratch page 0."""
         bt = np.zeros((self.n_slots, self.max_bt), np.int32)
         for i, st in enumerate(self.states):
-            if st is not None:
+            if st is not None and st.phase == DECODING:
                 bt[i, :len(st.pages)] = st.pages
+        return bt
+
+    def chunk_block_table(self, slot: int) -> np.ndarray:
+        """(1, max_bt) int32 — the single-sequence block table a prefill
+        chunk writes through (unused entries at the scratch page)."""
+        bt = np.zeros((1, self.max_bt), np.int32)
+        pages = self.states[slot].pages
+        bt[0, :len(pages)] = pages
         return bt
 
     def kv_cache_stats(self) -> dict:
@@ -442,18 +522,32 @@ class PagedSlotManager(_SlotOccupancy):
 
 
 class ContinuousEngine:
-    """Continuous-batching greedy decoding.
+    """Continuous-batching greedy decoding under one unified
+    token-budget step.
 
     Supported families: dense / moe (incl. MLA) / hybrid / ssm.  vlm and
     audio need per-request side inputs (patch embeds, encoder frames)
     and are served by the fixed-slot engine.
 
-    Attention-cached families bucket prompts (right-padded to the next
-    power of two) so admission prefills hit a handful of compiled
-    shapes; causal masking plus per-slot ``kv_len`` make the pad
-    positions invisible.  Recurrent families (hybrid/ssm) prefill at the
-    exact prompt length — their prefix state integrates every input
-    position, so padding would change it.
+    Paged families (dense/moe) admit through CHUNKED prefill: an
+    admitted sequence opens in the PREFILLING state and every tick
+    spends up to ``prefill_budget_tokens`` prompt tokens across the
+    PREFILLING slots (FIFO by admission, at most one chunk per slot per
+    tick), written straight into incrementally allocated KV pages by
+    ``models.transformer.prefill_chunk`` — no whole-prompt forward, no
+    prefix-cache graft.  Chunk shapes are bucketed (next power of two,
+    floor 8, capped at max_seq) so the jitted chunk step hits a handful
+    of compiled shapes; pad positions write to the scratch page and are
+    masked out.  The budget counts REAL prompt tokens — the executed
+    width is the bucket, so each chunk may round up to the floor/next
+    power of two; with a power-of-two budget >= 8 (the default) a
+    chunk's width never exceeds the budget itself.
+    ``prefill_budget_tokens=None`` removes the bound (each prompt lands
+    as one chunk — the monolithic comparator the benchmark gates
+    against).  Recurrent families (hybrid/ssm, always contiguous)
+    prefill monolithically at the exact prompt length — their prefix
+    state integrates every input position, so chunking or padding would
+    change it.
 
     kv_layout: "paged" (default for dense/moe via "auto") pools KV in
     fixed-size pages with per-sequence block tables — admission then
@@ -462,6 +556,11 @@ class ContinuousEngine:
     fixed-size recurrent state of hybrid/ssm).  page_size / pool_pages
     are the paged pool's sizing knobs (pool_pages defaults to 75% of
     the contiguous layout's positions; see ``paging.default_pool_pages``).
+
+    ``last_tick_prefill_tokens`` / ``last_tick_decode_tokens`` expose
+    the unified step's per-tick token accounting (prefill tokens spent;
+    decoding slots stepped) — the benchmark and the property suite
+    gate ``prefill <= budget`` and ``decode <= n_slots`` on them.
     """
 
     FAMILIES = ("dense", "moe", "hybrid", "ssm")
@@ -470,7 +569,8 @@ class ContinuousEngine:
     def __init__(self, cfg: ModelConfig, params, *, n_slots: int = 4,
                  max_seq: int = 2048, queue_capacity: Optional[int] = None,
                  kv_layout: str = "auto", page_size: int = 16,
-                 pool_pages: Optional[int] = None):
+                 pool_pages: Optional[int] = None,
+                 prefill_budget_tokens: Optional[int] = 64):
         if cfg.family not in self.FAMILIES:
             raise NotImplementedError(
                 f"ContinuousEngine does not serve family {cfg.family!r}")
@@ -479,31 +579,47 @@ class ContinuousEngine:
         if kv_layout == "auto":
             kv_layout = ("paged" if cfg.family in self.PAGED_FAMILIES
                          else "contiguous")
+        if prefill_budget_tokens is not None and prefill_budget_tokens < 1:
+            raise ValueError("prefill_budget_tokens must be >= 1 (or None "
+                             "for an unbounded, monolithic-style tick)")
         self.cfg = cfg
         self.params = params
         self.max_seq = max_seq
         self.kv_layout = kv_layout
+        self.prefill_budget_tokens = prefill_budget_tokens
         if kv_layout == "paged":
             self.slots = PagedSlotManager(cfg, n_slots, max_seq,
                                           page_size=page_size,
                                           pool_pages=pool_pages)
-            self._decode = jax.jit(
+            self._decode = _cached_jit(("cont_decode_paged", cfg), lambda: jax.jit(
                 lambda p, c, t, pos, bt: T.decode_step(
-                    p, cfg, c, t, pos, block_tables=bt))
+                    p, cfg, c, t, pos, block_tables=bt)))
+            self._chunk = _cached_jit(("prefill_chunk", cfg), lambda: jax.jit(
+                lambda p, c, t, nv, off, bt, cap: T.prefill_chunk(
+                    p, cfg, c, t, nv, off, bt, moe_capacity=cap),
+                static_argnums=(6,)))
         else:
             self.slots = SlotManager(cfg, n_slots, max_seq)
-            self._decode = jax.jit(
-                lambda p, c, t, pos: T.decode_step(p, cfg, c, t, pos))
+            self._decode = _cached_jit(("cont_decode", cfg), lambda: jax.jit(
+                lambda p, c, t, pos: T.decode_step(p, cfg, c, t, pos)))
         self.queue = RequestQueue(max_batch=n_slots,
                                   capacity=queue_capacity)
-        self.clock = 0                        # decode-step ticks
+        self.clock = 0                        # unified-step ticks
         self.finish_order: List[int] = []
         self.results: Dict[int, RequestResult] = {}
-        self._prefill = jax.jit(
+        self.last_tick_prefill_tokens = 0
+        self.last_tick_decode_tokens = 0
+        self._spent_this_tick = 0
+        self._tick_budget_left = self._budget()
+        self._prefill = _cached_jit(("cont_prefill", cfg), lambda: jax.jit(
             lambda p, t, cap: T.forward(p, cfg, {"tokens": t},
                                         moe_drop_free=True, moe_capacity=cap,
                                         return_cache=True, remat=False),
-            static_argnums=(2,))
+            static_argnums=(2,)))
+
+    def _budget(self):
+        b = self.prefill_budget_tokens
+        return float("inf") if b is None else b
 
     @classmethod
     def init(cls, cfg: ModelConfig, seed: int = 0, **kw):
@@ -548,6 +664,15 @@ class ContinuousEngine:
             self.cfg, int(toks.size))
 
     def _admit(self, req: Request, slot: int) -> None:
+        """Place ``req`` into ``slot``.  Paged layouts open the slot in
+        the PREFILLING state and immediately spend whatever remains of
+        this tick's prefill budget on its first chunk(s); contiguous
+        layouts (recurrent families and the memory baseline) keep the
+        monolithic prefill + slot graft."""
+        if self.kv_layout == "paged":
+            self.slots.place_prefilling(slot, req, self.clock)
+            self._pump_prefill(slot)
+            return
         S = len(req.prompt)
         bucket = self._bucket_len(S)
         toks = np.zeros((1, bucket), np.int32)
@@ -556,10 +681,69 @@ class ContinuousEngine:
         first = int(jnp.argmax(logits[0, S - 1]))
         st = _SlotState(request=req, pos=S, next_tok=first, emitted=[first],
                         admitted_step=self.clock,
+                        first_token_step=self.clock,
                         last_logits=np.asarray(logits[0, S - 1], np.float32))
         self.slots.place(slot, pcache, st)
         if len(st.emitted) >= req.max_new:    # max_new == 1: done at prefill
             self._finish(slot)
+
+    # -- chunked prefill (paged layout) -------------------------------------
+    def _chunk_bucket(self, C: int) -> int:
+        """Jit bucket for a chunk of C real tokens: next power of two
+        (floor 8), clamped to max_seq like ``_bucket_len``.  With a
+        power-of-two budget >= 8 (the deployment default) the executed
+        width never exceeds the budget itself."""
+        b = 8
+        while b < C:
+            b *= 2
+        return min(b, self.max_seq)
+
+    def _run_chunk(self, toks: np.ndarray, n_valid: int, pos_offset: int,
+                   bt: np.ndarray):
+        """One jitted chunk forward; MoE archs run the dynamic
+        per-chunk expert-capacity doubling loop (token-exact with the
+        unbounded drop-free path on success)."""
+        args = (jnp.asarray(toks), jnp.int32(n_valid), jnp.int32(pos_offset),
+                jnp.asarray(bt))
+        if self.cfg.moe is None:
+            logits, _, cache = self._chunk(self.params, self.slots.cache,
+                                           *args, None)
+            return logits, cache
+        return _dynamic_capacity_prefill(
+            lambda cap: self._chunk(self.params, self.slots.cache, *args, cap),
+            self.cfg, int(toks.size))
+
+    def _pump_prefill(self, slot: int) -> None:
+        """Spend the tick's remaining prefill-token budget streaming
+        prompt chunks of ``slot``'s PREFILLING sequence into its pages.
+        When the last chunk lands the sequence emits its first token
+        and flips to DECODING (joining this very tick's decode batch,
+        or finishing outright when ``max_new == 1``)."""
+        st = self.slots.states[slot]
+        req = st.request
+        S = len(req.prompt)
+        while st.phase == PREFILLING and self._tick_budget_left > 0:
+            off = req.prefill_pos
+            C = int(min(self._tick_budget_left, S - off))
+            Cb = self._chunk_bucket(C)
+            toks = np.zeros((1, Cb), np.int32)
+            toks[0, :C] = req.prompt[off:off + C]
+            self.slots.grow_for_chunk(slot, off + C)
+            logits, self.slots.cache = self._run_chunk(
+                toks, C, off, self.slots.chunk_block_table(slot))
+            req.prefill_pos = off + C
+            st.pos = off + C
+            self._tick_budget_left -= C
+            self._spent_this_tick += C
+            if req.prefill_pos >= S:
+                first = int(jnp.argmax(logits[0, C - 1]))
+                st.phase = DECODING
+                st.next_tok = first
+                st.emitted = [first]
+                st.first_token_step = self.clock
+                st.last_logits = np.asarray(logits[0, C - 1], np.float32)
+                if len(st.emitted) >= req.max_new:
+                    self._finish(slot)
 
     def _finish(self, slot: int) -> None:
         st = self.slots.states[slot]
@@ -567,7 +751,8 @@ class ContinuousEngine:
         self.results[req.rid] = RequestResult(
             rid=req.rid, tokens=np.asarray(st.emitted, np.int64),
             prompt_len=len(req.prompt), admitted_step=st.admitted_step,
-            finished_step=self.clock, n_preemptions=st.n_preemptions,
+            finished_step=self.clock, first_token_step=st.first_token_step,
+            n_preemptions=st.n_preemptions,
             logits_last=st.last_logits)
         self.finish_order.append(req.rid)
         self.slots.evict(slot)
@@ -586,11 +771,33 @@ class ContinuousEngine:
                 break                         # page pool exhausted: wait
             self._admit(self.queue.pop(), slot)
 
-    def _decode_once(self) -> None:
-        """Run ONE batched decode step over all active slots and evict
-        finished sequences; an idle tick when no slot is active."""
-        if not self.slots.any_active():
-            self.clock += 1                   # idle tick: wait for arrivals
+    def _prefilling_order(self) -> List[int]:
+        """PREFILLING slots in admission order (FIFO, slot id ties)."""
+        sl = self.slots
+        return sorted(sl.prefilling_slots(),
+                      key=lambda s: (sl.states[s].admitted_step, s))
+
+    def _end_tick(self) -> None:
+        """Close the tick's token accounting and open the next budget."""
+        self.last_tick_prefill_tokens = self._spent_this_tick
+        self.clock += 1
+        self._spent_this_tick = 0
+        self._tick_budget_left = self._budget()
+
+    def _idle_tick(self) -> None:
+        """A clock tick with no compute (a contact pass holding the
+        engine, or nothing to serve) — the prefill budget still resets,
+        so the next tick starts with a full allowance."""
+        self.last_tick_decode_tokens = 0
+        self._end_tick()
+
+    def _decode_batch(self) -> None:
+        """ONE batched decode step over every DECODING slot (PREFILLING
+        and empty slots ride along masked to the scratch region) and
+        evict finished sequences."""
+        decoding = self.slots.decoding_slots()
+        self.last_tick_decode_tokens = len(decoding)
+        if not decoding:
             return
         toks, pos = self.slots.decode_inputs()
         if self.kv_layout == "paged":
@@ -602,9 +809,8 @@ class ContinuousEngine:
             logits, self.slots.cache = self._decode(
                 self.params, self.slots.cache, jnp.asarray(toks),
                 jnp.asarray(pos))
-        self.clock += 1
         nxt = np.asarray(jnp.argmax(logits[:, 0], -1))
-        for slot in self.slots.active_slots():
+        for slot in decoding:
             st = self.slots.states[slot]
             st.emitted.append(int(nxt[slot]))
             st.next_tok = int(nxt[slot])
@@ -616,14 +822,32 @@ class ContinuousEngine:
                 st.last_logits = np.asarray(logits[slot, 0], np.float32)
                 self._finish(slot)
 
+    def _unified_step(self) -> None:
+        """ONE unified token-budget tick: spend what remains of the
+        tick's ``prefill_budget_tokens`` across PREFILLING slots (FIFO
+        by admission — admission itself already draws on the same
+        allowance), then run one batched decode step over the DECODING
+        slots.  Total model work this tick is therefore bounded by
+        ``prefill_budget_tokens + n_slots`` tokens, whatever arrives."""
+        if not self.slots.any_active():
+            self._idle_tick()                 # wait for arrivals
+            return
+        for slot in self._prefilling_order():
+            if self._tick_budget_left <= 0:
+                break
+            self._pump_prefill(slot)
+        self._decode_batch()
+        self._end_tick()
+
     def step(self) -> List[int]:
-        """Admit arrived requests into free slots, run one batched decode
-        step, evict finished sequences.  Returns the rids finished during
-        this step.  (``serving.scheduler`` drives ``_admit_arrivals`` /
-        ``_decode_once`` separately to interpose preemption.)"""
+        """Admit arrived requests into free slots, run one unified
+        token-budget step, evict finished sequences.  Returns the rids
+        finished during this step.  (``serving.scheduler`` drives
+        ``_admit_arrivals`` / ``_unified_step`` separately to interpose
+        preemption.)"""
         before = len(self.finish_order)
         self._admit_arrivals()
-        self._decode_once()
+        self._unified_step()
         return self.finish_order[before:]
 
     def run(self, requests: Optional[List[Request]] = None

@@ -26,6 +26,11 @@ from typing import Deque, Dict, List, Optional
 import jax
 import numpy as np
 
+try:                                   # optional dep, same policy as
+    import zstandard as zstd           # repro.checkpoint.store
+except ImportError:                    # pragma: no cover
+    zstd = None
+
 SCRATCH_PAGE = 0
 
 
@@ -121,8 +126,12 @@ class BlockAllocator:
 class SpillRecord:
     """Host-side spill state of one sequence across preemption epochs."""
     kv: object                  # prefix-shaped pytree, leaves (L,1,n*ps,...)
+    #                             — or its packed form under a codec:
+    #                             (treedef, [(blob, dtype_str, shape), ...])
     synced_pages: int           # pages of ``kv`` merged so far
     epoch: int = 0              # spills merged into this record
+    nbytes: int = 0             # bytes this record holds on the host
+    #                             (compressed bytes under a codec)
 
 
 class DeltaSpillStore:
@@ -138,14 +147,40 @@ class DeltaSpillStore:
 
     Records persist across resumes (that is what makes the NEXT spill a
     delta) and are dropped when the sequence finishes.
+
+    ``codec="zstd"`` (optional ``zstandard`` dep, same policy as
+    ``repro.checkpoint.store``) keeps host entries compressed —
+    lossless, so merges stay bit-exact — and meters the compressed
+    delta bytes alongside the raw byte ledger.
+
+    ``max_entries`` / ``max_bytes`` bound the store: inserting past
+    either cap evicts least-recently-SPILLED records (never the one
+    just written).  Evicted rids are surfaced through ``take_evicted``
+    so the scheduler can redo long-idle swapped sequences from prefill
+    instead of resuming from a snapshot that no longer exists.
     """
 
-    def __init__(self, page_size: int):
+    def __init__(self, page_size: int, *, codec: Optional[str] = None,
+                 max_entries: Optional[int] = None,
+                 max_bytes: Optional[int] = None):
+        if codec not in (None, "zstd"):
+            raise ValueError(f"unknown spill codec {codec!r}")
+        if codec == "zstd" and zstd is None:
+            raise RuntimeError(
+                "spill codec 'zstd' requested but the 'zstandard' package "
+                "is not installed — install it or pass codec=None")
         self.page_size = page_size
-        self._by_rid: Dict[int, SpillRecord] = {}
+        self.codec = codec
+        self.max_entries = max_entries
+        self.max_bytes = max_bytes
+        self._by_rid: Dict[int, SpillRecord] = {}   # insertion-ordered: LRU
+        self._evicted: List[int] = []
+        self.stored_bytes = 0       # live host bytes (compressed if codec)
+        self.n_evictions = 0
         self.n_spills = 0
         self.n_delta_spills = 0     # spills that shipped < the live set
         self.bytes_spilled = 0      # actually shipped (delta) bytes
+        self.bytes_compressed = 0   # same deltas after the codec (0 w/o)
         self.bytes_full_equiv = 0   # what full spills would have shipped
 
     def __contains__(self, rid: int) -> bool:
@@ -157,6 +192,12 @@ class DeltaSpillStore:
     def record(self, rid: int) -> Optional[SpillRecord]:
         return self._by_rid.get(rid)
 
+    def snapshot(self, rid: int):
+        """The full prefix-shaped KV snapshot of ``rid``'s record
+        (decompressed under a codec) — what a resume grafts back.  The
+        record is the ONLY host copy of a store-managed spill."""
+        return self._unpack(self._by_rid[rid].kv)
+
     def synced_pages(self, rid: int) -> int:
         rec = self._by_rid.get(rid)
         return rec.synced_pages if rec is not None else 0
@@ -165,40 +206,106 @@ class DeltaSpillStore:
     def _nbytes(tree) -> int:
         return int(sum(np.asarray(l).nbytes for l in jax.tree.leaves(tree)))
 
+    # -- codec --------------------------------------------------------------
+    def _pack(self, tree):
+        """(packed_kv, host_bytes) — identity without a codec."""
+        if self.codec is None:
+            return tree, self._nbytes(tree)
+        leaves, treedef = jax.tree.flatten(tree)
+        cctx = zstd.ZstdCompressor(level=3)
+        packed = []
+        for l in leaves:
+            a = np.ascontiguousarray(np.asarray(l))
+            packed.append((cctx.compress(a.tobytes()), a.dtype.str, a.shape))
+        return (treedef, packed), sum(len(b) for b, _, _ in packed)
+
+    def _unpack(self, kv):
+        if self.codec is None:
+            return kv
+        treedef, packed = kv
+        dctx = zstd.ZstdDecompressor()
+        leaves = [np.frombuffer(dctx.decompress(b),
+                                dtype=np.dtype(dt)).reshape(shape)
+                  for b, dt, shape in packed]
+        return jax.tree.unflatten(treedef, leaves)
+
+    # -- LRU eviction --------------------------------------------------------
+    def _evict_over_caps(self, keep: int) -> None:
+        def over() -> bool:
+            return ((self.max_entries is not None
+                     and len(self._by_rid) > self.max_entries)
+                    or (self.max_bytes is not None
+                        and self.stored_bytes > self.max_bytes))
+        # dict order is insertion order and merge() re-inserts, so the
+        # head is always the least-recently-spilled record
+        while over() and len(self._by_rid) > 1:
+            rid = next(iter(self._by_rid))
+            if rid == keep:
+                break                  # never evict the record just written
+            rec = self._by_rid.pop(rid)
+            self.stored_bytes -= rec.nbytes
+            self.n_evictions += 1
+            self._evicted.append(rid)
+
+    def take_evicted(self) -> List[int]:
+        """Evicted rids since the last call (the scheduler's redo hook)."""
+        out, self._evicted = self._evicted, []
+        return out
+
     def merge(self, rid: int, delta, synced: int, total_pages: int):
         """Merge ``delta`` (pages [synced, total_pages) of the live block
         table, prefix-shaped, or None when nothing was dirtied) into the
         sequence's record and return the full reassembled snapshot."""
         ps = self.page_size
         rec = self._by_rid.get(rid)
+        base = self._unpack(rec.kv) if rec is not None else None
         if rec is None or synced == 0:
             assert delta is not None and synced == 0, (rid, synced)
             merged = delta
         elif delta is None:                      # re-spill with no new pages
             assert synced == total_pages, (synced, total_pages)
-            merged = rec.kv
+            merged = base
         else:
             merged = jax.tree.map(
                 lambda b, d: np.concatenate(
                     [np.asarray(b)[:, :, :synced * ps], np.asarray(d)],
                     axis=2),
-                rec.kv, delta)
+                base, delta)
         delta_bytes = self._nbytes(delta) if delta is not None else 0
         full_bytes = self._nbytes(merged)
         self.n_spills += 1
         self.n_delta_spills += int(delta_bytes < full_bytes)
         self.bytes_spilled += delta_bytes
         self.bytes_full_equiv += full_bytes
-        self._by_rid[rid] = SpillRecord(kv=merged, synced_pages=total_pages,
-                                        epoch=(rec.epoch + 1) if rec else 1)
+        if rec is not None:
+            self.stored_bytes -= rec.nbytes
+            del self._by_rid[rid]                # re-insert at the MRU end
+        kv, nbytes = self._pack(merged)
+        if self.codec is not None and delta is not None:
+            # meter what the codec shipped: a first spill's merged IS
+            # its delta (reuse the pack); a re-spill packs its (much
+            # smaller) delta once more just for the ledger
+            self.bytes_compressed += (nbytes if merged is delta
+                                      else self._pack(delta)[1])
+        self._by_rid[rid] = SpillRecord(kv=kv, synced_pages=total_pages,
+                                        epoch=(rec.epoch + 1) if rec else 1,
+                                        nbytes=nbytes)
+        self.stored_bytes += nbytes
+        self._evict_over_caps(keep=rid)
         return merged
 
     def drop(self, rid: int) -> None:
-        self._by_rid.pop(rid, None)
+        rec = self._by_rid.pop(rid, None)
+        if rec is not None:
+            self.stored_bytes -= rec.nbytes
 
     def stats(self) -> dict:
         return {
             "n_delta_spills": self.n_delta_spills,
             "spill_bytes": self.bytes_spilled,
             "spill_bytes_full_equiv": self.bytes_full_equiv,
+            "spill_bytes_compressed": self.bytes_compressed,
+            "n_store_evictions": self.n_evictions,
+            "spill_store_entries": len(self._by_rid),
+            "spill_store_bytes": self.stored_bytes,
         }

@@ -36,6 +36,18 @@ Re-preempting a long sequence ships only a KV *delta*: the host-side
 resumes, the block table tracks a ``synced_pages`` watermark, and
 ``extract_paged_cache(..., since=...)`` gathers just the pages dirtied
 since the last spill — base + delta reassemble token-exactly.
+``spill_codec="zstd"`` keeps the host entries compressed, and
+``spill_max_entries``/``spill_max_bytes`` LRU-cap the store: a
+long-idle swapped sequence whose record is evicted is requeued and
+redone from prefill.
+
+Every engine tick under these schedulers is a *unified token-budget
+step* (``engine.prefill_budget_tokens``): arriving prompts stream in
+as bounded chunks next to in-flight decodes, so a pass's transmit lane
+always gets its next tick within a bounded latency — and mid-PREFILL
+sequences preempt/resume through the same swap ledger (their chunk
+progress rides ``Request.prefill_pos`` and the ``synced_pages``
+watermark).
 
 Both schedulers are deterministic: same trace + same windows => same
 tokens, preemption points, and ledger.
@@ -62,12 +74,14 @@ from repro.serving.paging import DeltaSpillStore
 class SwapEntry:
     """One preempted sequence in the swap ledger."""
     state: object                       # the engine's detached _SlotState
-    kv: Optional[dict]                  # host KV snapshot (None = resident)
+    kv: Optional[dict]                  # host KV snapshot; None when the
+    #                                     swap is resident, when the spill
+    #                                     lives in the DeltaSpillStore (the
+    #                                     store's record is the ONLY host
+    #                                     copy), or when a PREFILLING
+    #                                     sequence had no pages yet
     preempted_step: int                 # engine clock at preemption
-
-    @property
-    def spilled(self) -> bool:
-        return self.kv is not None
+    spilled: bool = True                # pages released (resume re-reserves)
 
     @property
     def rid(self) -> int:
@@ -91,7 +105,10 @@ class PreemptiveScheduler:
     """
 
     def __init__(self, engine: ContinuousEngine, *,
-                 preempt_mode: str = "spill", delta_spill: bool = True):
+                 preempt_mode: str = "spill", delta_spill: bool = True,
+                 spill_codec: Optional[str] = None,
+                 spill_max_entries: Optional[int] = None,
+                 spill_max_bytes: Optional[int] = None):
         if preempt_mode not in ("spill", "resident"):
             raise ValueError(f"unknown preempt_mode {preempt_mode!r}")
         self.engine = engine
@@ -99,15 +116,21 @@ class PreemptiveScheduler:
         # KV-delta spills (paged layout only): the host store keeps each
         # spilled sequence's snapshot across resumes, so a re-preemption
         # ships only the pages dirtied since — the block table's
-        # ``synced_pages`` watermark — instead of the whole live set
+        # ``synced_pages`` watermark — instead of the whole live set.
+        # spill_codec="zstd" compresses host entries (optional dep);
+        # spill_max_entries/_bytes cap the store with LRU eviction —
+        # an evicted, still-swapped sequence redoes from prefill.
         self.store: Optional[DeltaSpillStore] = (
-            DeltaSpillStore(engine.slots.page_size)
+            DeltaSpillStore(engine.slots.page_size, codec=spill_codec,
+                            max_entries=spill_max_entries,
+                            max_bytes=spill_max_bytes)
             if delta_spill and hasattr(engine.slots, "allocator") else None)
         self.held_pages = 0             # transmit-lane page hold (overlap)
         self.swapped: Dict[int, SwapEntry] = {}      # rid -> entry
         self.n_preemptions = 0
         self.n_spills = 0
         self.n_resumes = 0
+        self.n_redo_from_prefill = 0    # swap entries lost to store eviction
         self.swapped_steps = 0          # total clock ticks spent swapped out
         self.resume_s: List[float] = [] # wall seconds per restore
 
@@ -141,32 +164,73 @@ class PreemptiveScheduler:
         assert st0 is not None, f"slot {slot} empty"
         kv = None
         if mode == "spill":
-            if self.store is not None:
-                synced = st0.synced_pages
-                delta = slots.snapshot(slot, since=synced)
-                kv = self.store.merge(st0.request.rid, delta, synced,
-                                      len(st0.pages))
-            else:
-                kv = slots.snapshot(slot)
+            if not hasattr(slots, "allocator"):
+                kv = slots.snapshot(slot)          # contiguous: full row
+            elif st0.pages:
+                if self.store is not None:
+                    # the store's record IS the host copy — the swap
+                    # entry carries no duplicate snapshot, so the
+                    # codec/caps really bound host spill memory
+                    synced = st0.synced_pages
+                    delta = slots.snapshot(slot, since=synced)
+                    self.store.merge(st0.request.rid, delta, synced,
+                                     len(st0.pages))
+                else:
+                    kv = slots.snapshot(slot)
+            # else: PREFILLING with no chunk landed yet — nothing to
+            # snapshot; the re-placed state redoes its chunks on resume
         st = slots.detach(slot, release_pages=mode == "spill")
         st.n_preemptions += 1
         self.swapped[st.request.rid] = SwapEntry(
-            state=st, kv=kv, preempted_step=self.engine.clock)
+            state=st, kv=kv, preempted_step=self.engine.clock,
+            spilled=mode == "spill")
         self.n_preemptions += 1
         self.n_spills += int(mode == "spill")
+        self._drain_store_evictions()
         return st.request.rid
 
     def preempt_all(self, mode: Optional[str] = None) -> List[int]:
         """Yield every active slot — the contact-window entry point."""
         return [self.preempt(s, mode) for s in self.engine.slots.active_slots()]
 
+    def _drain_store_evictions(self) -> None:
+        """A spill-store eviction invalidates its rid's host snapshot
+        lineage.  If that sequence is still swapped out spilled, the
+        evicted record WAS its KV — drop the swap entry and redo the
+        request from prefill (progress is discarded; greedy decode makes
+        the redo token-exact).  A rid that already resumed (or swapped
+        resident) merely loses delta eligibility: its live watermark is
+        reset so its next spill ships the full live set again."""
+        if self.store is None:
+            return
+        for rid in self.store.take_evicted():
+            e = self.swapped.get(rid)
+            if e is not None and e.spilled:
+                del self.swapped[rid]
+                self.engine.queue.requeue_front(e.state.request)
+                self.n_redo_from_prefill += 1
+                continue
+            # still live (active slot or resident swap): pages [0,
+            # synced) no longer have a host copy, so a stale watermark
+            # would make the next spill a partial snapshot
+            st = (e.state if e is not None else
+                  next((s for s in self.engine.slots.states
+                        if s is not None and s.request.rid == rid), None))
+            if st is not None:
+                st.synced_pages = 0
+
     def resume(self, rid: int, slot: int) -> None:
         """Re-place a swapped sequence into a free slot, token-exactly."""
         entry = self.swapped.pop(rid)
         t0 = time.perf_counter()
-        self.engine.slots.restore(slot, entry.state, entry.kv)
-        if (entry.kv is not None and self.store is not None
-                and rid in self.store):
+        kv = entry.kv
+        from_store = (entry.spilled and kv is None and self.store is not None
+                      and rid in self.store)
+        if from_store:
+            kv = self.store.snapshot(rid)
+        self.engine.slots.restore(slot, entry.state, kv,
+                                  spilled=entry.spilled)
+        if from_store:
             # every restored page now matches the host store's copy:
             # raise the watermark so the NEXT spill ships only pages
             # dirtied from here on (decode lowers it again per write)
@@ -329,16 +393,18 @@ class PreemptiveScheduler:
             self._fill_free_slots()
 
     def step(self, *, decode: bool = True) -> List[int]:
-        """One scheduler tick: resume/admit by priority, then one batched
-        decode step (or an idle tick with ``decode=False`` — a contact
-        window holding the compute).  Returns rids finished this tick."""
+        """One scheduler tick: resume/admit by priority, then one
+        unified token-budget step (or an idle tick with ``decode=False``
+        — a contact window holding the compute).  Returns rids finished
+        this tick."""
         eng = self.engine
         before = len(eng.finish_order)
+        self._drain_store_evictions()
         if decode:
             self._admit_by_priority()
-            eng._decode_once()
+            eng._unified_step()
         else:
-            eng.clock += 1                     # compute yielded: idle tick
+            eng._idle_tick()                   # compute yielded
         finished = eng.finish_order[before:]
         if self.store is not None:
             for rid in finished:               # spill history is dead weight
@@ -359,11 +425,14 @@ class PreemptiveScheduler:
         lat = self.resume_s
         delta = (self.store.stats() if self.store is not None else
                  {"n_delta_spills": 0, "spill_bytes": 0,
-                  "spill_bytes_full_equiv": 0})
+                  "spill_bytes_full_equiv": 0, "spill_bytes_compressed": 0,
+                  "n_store_evictions": 0, "spill_store_entries": 0,
+                  "spill_store_bytes": 0})
         return {
             "n_preemptions": self.n_preemptions,
             "n_spills": self.n_spills,
             "n_resumes": self.n_resumes,
+            "n_redo_from_prefill": self.n_redo_from_prefill,
             "swapped_steps": self.swapped_steps,
             "resume_latency_s_mean": round(float(np.mean(lat)), 6) if lat
             else 0.0,

@@ -1,0 +1,366 @@
+"""Chunked prefill / unified token-budget step: token-exactness vs the
+monolithic prefill across budgets (including the budget < prompt <
+2*budget edges), preempt-at-every-chunk resume exactness, incremental
+page allocation (the graft-free admission path), and the spill-store
+satellites (zstd codec, LRU eviction -> redo-from-prefill).
+
+The hypothesis invariant (per-tick batch tokens <= budget +
+n_decode_slots under random traces) lives in ``test_property.py``,
+which guards the optional dependency.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.models import transformer as T
+from repro.serving.batching import Request, poisson_trace
+from repro.serving.engine import (PREFILLING, ContinuousEngine,
+                                  PagedSlotManager)
+from repro.serving.paging import DeltaSpillStore, zstd
+from repro.serving.scheduler import PreemptiveScheduler
+
+from helpers import f32_cfg
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return f32_cfg("smollm-360m")
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return T.init_params(jax.random.PRNGKey(0), cfg, max_seq=64)
+
+
+def _clone(reqs):
+    return [r.clone() for r in reqs]
+
+
+def _paired_tokens(res_a, res_b):
+    return [(res_a[a].tokens, res_b[b].tokens)
+            for a, b in zip(sorted(res_a), sorted(res_b))]
+
+
+def _assert_drained(eng):
+    alloc = getattr(eng.slots, "allocator", None)
+    if alloc is not None:
+        assert alloc.in_use == 0 and alloc.reserved == 0
+
+
+# ---------------------------------------------------------------------------
+# token-exactness vs monolithic prefill across budgets
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("budget", [4, 8, 16, None])
+def test_chunked_matches_monolithic_budget_sweep(cfg, params, budget):
+    """Every budget (None = single whole-prompt chunk) must reproduce
+    the contiguous engine's monolithic-prefill token streams on a mixed
+    trace.  Prompt lengths straddle every chunking edge: below the
+    budget, budget < prompt < 2*budget, and several-chunk prompts."""
+    trace = poisson_trace(10, rate=0.7, prompt_lens=(3, 14), max_new=(1, 10),
+                         vocab_size=cfg.vocab_size, seed=11)
+    mono = ContinuousEngine(cfg, params, n_slots=3, max_seq=64,
+                            kv_layout="contiguous").run(_clone(trace))
+    chunked = ContinuousEngine(cfg, params, n_slots=3, max_seq=64,
+                               kv_layout="paged", page_size=8,
+                               prefill_budget_tokens=budget).run(_clone(trace))
+    assert len(mono) == len(chunked) == len(trace)
+    for want, got in _paired_tokens(mono, chunked):
+        np.testing.assert_array_equal(got, want)
+
+
+def test_budget_lt_prompt_lt_twice_budget_edge(cfg, params):
+    """The two-chunk edge: budget < prompt < 2*budget splits the prompt
+    into one full chunk and one partial chunk across two ticks."""
+    prompt = np.arange(1, 12, dtype=np.int32)          # 11 tokens
+    mono = ContinuousEngine(cfg, params, n_slots=1, max_seq=64,
+                            kv_layout="contiguous")
+    want = list(mono.run([Request(prompt=prompt.copy(),
+                                  max_new=6)]).values())[0].tokens
+    eng = ContinuousEngine(cfg, params, n_slots=1, max_seq=64,
+                           page_size=8, prefill_budget_tokens=8)
+    probe = Request(prompt=prompt.copy(), max_new=6)
+    eng.submit(probe)
+    eng.step()                                         # chunk 1: 8 tokens
+    (slot,) = eng.slots.active_slots()
+    st = eng.slots.states[slot]
+    assert st.phase == PREFILLING and probe.prefill_pos == 8
+    assert st.emitted == []                            # no token yet
+    eng.step()                                         # chunk 2: 3 tokens
+    assert eng.slots.states[slot].phase != PREFILLING
+    assert probe.prefill_pos == 11
+    res = eng.run()
+    np.testing.assert_array_equal(res[probe.rid].tokens, want)
+    assert res[probe.rid].first_token_step > res[probe.rid].admitted_step
+    _assert_drained(eng)
+
+
+@pytest.mark.slow   # compiles chunked prefill + decode per arch
+@pytest.mark.parametrize("arch", [
+    "qwen3-moe-30b-a3b",    # per-chunk dynamic expert capacity
+    "deepseek-v3-671b",     # MLA absorbed chunk attention
+])
+@pytest.mark.parametrize("budget", [4, 16])
+def test_chunked_matches_monolithic_all_families(arch, budget):
+    fam_cfg = f32_cfg(arch)
+    fam_params = T.init_params(jax.random.PRNGKey(0), fam_cfg, max_seq=64)
+    rng = np.random.default_rng(6)
+    reqs = [Request(prompt=rng.integers(1, fam_cfg.vocab_size, 11)
+                    .astype(np.int32), max_new=5),
+            Request(prompt=rng.integers(1, fam_cfg.vocab_size, 9)
+                    .astype(np.int32), max_new=7, arrival_t=2.0)]
+    mono = ContinuousEngine(fam_cfg, fam_params, n_slots=2, max_seq=64,
+                            kv_layout="contiguous").run(_clone(reqs))
+    chunked = ContinuousEngine(
+        fam_cfg, fam_params, n_slots=2, max_seq=64, kv_layout="paged",
+        prefill_budget_tokens=budget).run(_clone(reqs))
+    for want, got in _paired_tokens(mono, chunked):
+        np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# graft-free admission: pages land incrementally, ticks stay bounded
+# ---------------------------------------------------------------------------
+
+def test_pages_allocated_incrementally_as_chunks_land(cfg, params):
+    """Admission allocates NO pages (reservation only); each chunk draws
+    exactly the pages it writes.  The old path allocated every prompt
+    page up front and grafted a whole prefix cache over them."""
+    eng = ContinuousEngine(cfg, params, n_slots=1, max_seq=64,
+                           page_size=8, prefill_budget_tokens=8)
+    probe = Request(prompt=np.arange(1, 33, dtype=np.int32), max_new=4)
+    eng.submit(probe)
+    eng.step()                              # admission pumps one chunk
+    st = eng.slots.states[0]
+    assert st.phase == PREFILLING
+    assert len(st.pages) == 1               # 8 of 32 prompt tokens landed
+    assert eng.slots.allocator.reserved == st.budget - 1
+    eng.step()                              # tick 2: next 8 tokens
+    assert len(st.pages) == 2
+    assert not hasattr(PagedSlotManager, "place")   # the graft path is gone
+    res = eng.run()
+    assert len(res[probe.rid].tokens) == 4
+    _assert_drained(eng)
+
+
+def test_tick_budget_bounds_mixed_batch(cfg, params):
+    """Per-tick accounting: prefill tokens never exceed the budget and
+    decode tokens never exceed the slot count, even while a long prompt
+    streams in next to live decodes."""
+    eng = ContinuousEngine(cfg, params, n_slots=2, max_seq=64,
+                           page_size=8, prefill_budget_tokens=4)
+    eng.submit(Request(prompt=np.arange(1, 7, dtype=np.int32), max_new=12))
+    eng.submit(Request(prompt=np.arange(1, 33, dtype=np.int32), max_new=4,
+                       arrival_t=3.0))
+    while len(eng.queue) or eng.slots.any_active():
+        eng.step()
+        assert eng.last_tick_prefill_tokens <= 4
+        assert eng.last_tick_decode_tokens <= 2
+    _assert_drained(eng)
+
+
+# ---------------------------------------------------------------------------
+# preempt/resume of mid-prefill sequences
+# ---------------------------------------------------------------------------
+
+def test_preempt_at_every_chunk_resume_exact(cfg, params):
+    """Spill the probe after EVERY prefill chunk (including straight
+    after admission, before any chunk lands) and after the first decode
+    ticks — each resumed stream must equal the uninterrupted run, with
+    a filler recycling the released pages in between."""
+    prompt = np.arange(1, 15, dtype=np.int32)          # 14 tokens, 4 chunks
+    budget, max_new = 4, 6
+    mono = ContinuousEngine(cfg, params, n_slots=2, max_seq=64,
+                            kv_layout="contiguous")
+    want = list(mono.run([Request(prompt=prompt.copy(),
+                                  max_new=max_new)]).values())[0].tokens
+    eng = ContinuousEngine(cfg, params, n_slots=2, max_seq=64,
+                           page_size=8, prefill_budget_tokens=budget)
+    sched = PreemptiveScheduler(eng)
+    n_chunks = -(-len(prompt) // budget)
+    for k in range(n_chunks + 2):          # every chunk + 2 decode ticks
+        probe = Request(prompt=prompt.copy(), max_new=max_new)
+        sched.submit(probe)
+        for _ in range(k + 1):             # step 1 admits + lands chunk 1
+            sched.step()
+        (slot,) = [s for s in eng.slots.active_slots()
+                   if eng.slots.states[s].request.rid == probe.rid]
+        assert probe.prefill_pos == min((k + 1) * budget, len(prompt))
+        if k < n_chunks - 1:               # the (k+1)-th chunk just landed
+            assert eng.slots.states[slot].phase == PREFILLING
+        sched.preempt(slot)
+        sched.submit(Request(prompt=prompt[:5].copy(), max_new=3))
+        sched.step()                       # filler churns the pool
+        sched.step()
+        res = sched.run()
+        np.testing.assert_array_equal(res[probe.rid].tokens, want)
+        assert res[probe.rid].n_preemptions == 1
+        _assert_drained(eng)
+    assert sched.n_resumes == sched.n_preemptions
+
+
+def test_preempt_before_first_chunk_no_snapshot(cfg, params):
+    """A PREFILLING sequence spilled before any chunk landed has no KV
+    to snapshot: the swap entry carries kv=None, resume re-reserves the
+    budget and the chunks simply redo — still token-exact."""
+    mono = ContinuousEngine(cfg, params, n_slots=2, max_seq=64,
+                            kv_layout="contiguous")
+    prompt = np.arange(1, 10, dtype=np.int32)
+    want = list(mono.run([Request(prompt=prompt.copy(),
+                                  max_new=5)]).values())[0].tokens
+    eng = ContinuousEngine(cfg, params, n_slots=2, max_seq=64,
+                           page_size=8, prefill_budget_tokens=4)
+    sched = PreemptiveScheduler(eng)
+    filler = Request(prompt=np.arange(1, 5, dtype=np.int32), max_new=6)
+    probe = Request(prompt=prompt.copy(), max_new=5)
+    sched.submit(filler)                   # filler's chunk eats the whole
+    sched.submit(probe)                    # tick budget before the probe's
+    sched.step()
+    (slot,) = [s for s in eng.slots.active_slots()
+               if eng.slots.states[s].request.rid == probe.rid]
+    assert eng.slots.states[slot].pages == []
+    sched.preempt(slot)
+    entry = sched.swapped[probe.rid]
+    assert entry.spilled and entry.kv is None
+    res = sched.run()
+    np.testing.assert_array_equal(res[probe.rid].tokens, want)
+    assert res[probe.rid].n_preemptions == 1
+    _assert_drained(eng)
+
+
+# ---------------------------------------------------------------------------
+# spill-store satellites: zstd codec + LRU eviction
+# ---------------------------------------------------------------------------
+
+@pytest.mark.skipif(zstd is None, reason="optional zstandard not installed")
+def test_spill_codec_zstd_roundtrip_exact(cfg, params):
+    """Compressed host entries: the delta merge decompresses the base,
+    re-spilled streams stay token-exact, and compressed bytes are
+    metered next to the raw ledger."""
+    prompt = np.arange(1, 13, dtype=np.int32)
+    mono = ContinuousEngine(cfg, params, n_slots=2, max_seq=64,
+                            kv_layout="contiguous")
+    want = list(mono.run([Request(prompt=prompt.copy(),
+                                  max_new=12)]).values())[0].tokens
+    eng = ContinuousEngine(cfg, params, n_slots=2, max_seq=64, page_size=8)
+    sched = PreemptiveScheduler(eng, spill_codec="zstd")
+    probe = Request(prompt=prompt.copy(), max_new=12)
+    sched.submit(probe)
+    for _ in range(2):
+        sched.step()
+    sched.preempt(eng.slots.active_slots()[0])     # full spill (packed)
+    sched.step()
+    sched.step()
+    sched.preempt(eng.slots.active_slots()[0])     # delta over packed base
+    s = sched.stats()
+    assert s["n_delta_spills"] == 1
+    assert 0 < s["spill_bytes_compressed"]
+    assert s["spill_bytes"] > 0
+    res = sched.run()
+    np.testing.assert_array_equal(res[probe.rid].tokens, want)
+    _assert_drained(eng)
+
+
+def test_spill_codec_requires_zstandard():
+    if zstd is None:
+        with pytest.raises(RuntimeError):
+            DeltaSpillStore(8, codec="zstd")
+    with pytest.raises(ValueError):
+        DeltaSpillStore(8, codec="lz4")
+
+
+def test_store_lru_eviction_caps_entries():
+    store = DeltaSpillStore(2, max_entries=2)
+    mk = lambda n: {"k": np.ones((1, 1, n * 2, 1), np.float32)}
+    for rid in (1, 2, 3):
+        store.merge(rid, mk(1), 0, 1)
+    assert len(store) == 2 and 1 not in store      # LRU (rid 1) evicted
+    assert store.take_evicted() == [1]
+    assert store.take_evicted() == []              # drained once
+    store.merge(2, None, 1, 1)                     # touch rid 2 -> MRU
+    store.merge(4, mk(1), 0, 1)                    # now rid 3 is LRU
+    assert 3 not in store and 2 in store
+    assert store.stats()["n_store_evictions"] == 2
+    assert store.stats()["spill_store_entries"] == 2
+
+
+def test_store_max_bytes_eviction_and_accounting():
+    store = DeltaSpillStore(2, max_bytes=100)
+    mk = lambda n: {"k": np.ones((1, 1, n * 2, 8), np.float32)}  # 64B/page
+    store.merge(1, mk(1), 0, 1)
+    store.merge(2, mk(1), 0, 1)                    # 128B > cap: evict rid 1
+    assert 1 not in store and 2 in store
+    assert store.stats()["spill_store_bytes"] <= 100
+    store.drop(2)
+    assert store.stats()["spill_store_bytes"] == 0
+
+
+def test_store_eviction_of_resumed_sequence_resets_watermark(cfg, params):
+    """Regression: evicting the record of a sequence that already
+    RESUMED must reset its live ``synced_pages`` watermark — otherwise
+    its next spill would try to merge a delta into a record that no
+    longer exists (or silently persist a partial snapshot)."""
+    want = None
+    mono = ContinuousEngine(cfg, params, n_slots=2, max_seq=64,
+                            kv_layout="contiguous")
+    prompt = np.arange(1, 13, dtype=np.int32)
+    want = list(mono.run([Request(prompt=prompt.copy(),
+                                  max_new=14)]).values())[0].tokens
+    eng = ContinuousEngine(cfg, params, n_slots=2, max_seq=64, page_size=8)
+    sched = PreemptiveScheduler(eng, spill_max_entries=1)
+    probe = Request(prompt=prompt.copy(), max_new=14)
+    other = Request(prompt=np.arange(3, 12, dtype=np.int32), max_new=6)
+    sched.submit(probe)
+    sched.submit(other)
+    sched.step()
+    (slot,) = [s for s in eng.slots.active_slots()
+               if eng.slots.states[s].request.rid == probe.rid]
+    sched.preempt(slot)                # record created for probe
+    sched.step()                       # probe resumes (watermark raised)
+    (slot,) = [s for s in eng.slots.active_slots()
+               if eng.slots.states[s].request.rid == other.rid]
+    sched.preempt(slot)                # other's spill evicts probe's record
+    sched.step()
+    (slot,) = [s for s in eng.slots.active_slots()
+               if eng.slots.states[s].request.rid == probe.rid]
+    assert eng.slots.states[slot].synced_pages == 0    # watermark reset
+    sched.preempt(slot)                # must be a FULL spill, not a delta
+    res = sched.run()
+    np.testing.assert_array_equal(res[probe.rid].tokens, want)
+    assert sched.n_redo_from_prefill == 0
+    _assert_drained(eng)
+
+
+def test_store_eviction_triggers_redo_from_prefill(cfg, params):
+    """Two spilled sequences against a 1-entry store: the first spill's
+    record is evicted by the second, so the first sequence redoes from
+    prefill — everything still finishes token-exact and accounted
+    (resumes + redos == preemptions)."""
+    prompts = [np.arange(1, 10, dtype=np.int32),
+               np.arange(2, 11, dtype=np.int32)]
+    want = []
+    for p in prompts:                      # fresh engine per reference run
+        mono = ContinuousEngine(cfg, params, n_slots=2, max_seq=64,
+                                kv_layout="contiguous")
+        res = mono.run([Request(prompt=p.copy(), max_new=8)])
+        want.append(list(res.values())[0].tokens)
+    eng = ContinuousEngine(cfg, params, n_slots=2, max_seq=64, page_size=8)
+    sched = PreemptiveScheduler(eng, spill_max_entries=1)
+    reqs = [Request(prompt=p.copy(), max_new=8) for p in prompts]
+    for r in reqs:
+        sched.submit(r)
+    sched.step()
+    for slot in list(eng.slots.active_slots()):    # spill both in-flight
+        sched.preempt(slot)
+    sched.step(decode=False)
+    assert sched.n_redo_from_prefill == 1          # first record evicted
+    assert reqs[0].rid not in sched.swapped        # requeued, not swapped
+    res = sched.run()
+    for r, w in zip(reqs, want):
+        np.testing.assert_array_equal(res[r.rid].tokens, w)
+    assert sched.n_resumes + sched.n_redo_from_prefill == sched.n_preemptions
+    stats = sched.stats()
+    assert stats["n_store_evictions"] == 1
+    assert stats["n_redo_from_prefill"] == 1
+    assert len(sched.store) == 0
+    _assert_drained(eng)

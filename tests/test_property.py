@@ -357,6 +357,38 @@ def _paged_cfg_params():
     return _PAGED_CACHE["cfg"], _PAGED_CACHE["params"]
 
 
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from([3, 4, 8, 16]))
+@settings(max_examples=5, deadline=None)
+def test_unified_step_token_budget_invariant(seed, budget):
+    """Random traces at random prefill budgets: no tick's mixed batch
+    ever exceeds ``budget`` prefill-chunk tokens plus ``n_slots`` decode
+    tokens, every admitted request still finishes with exactly its
+    max_new tokens, and the page pool drains."""
+    from repro.serving.batching import poisson_trace
+    from repro.serving.engine import ContinuousEngine
+    cfg, params = _paged_cfg_params()
+    trace = poisson_trace(5, rate=0.9, prompt_lens=(2, 20), max_new=(1, 7),
+                          vocab_size=cfg.vocab_size, seed=seed)
+    eng = ContinuousEngine(cfg, params, n_slots=2, max_seq=32,
+                           kv_layout="paged", page_size=8,
+                           prefill_budget_tokens=budget)
+    for r in sorted(trace, key=lambda r: r.arrival_t):
+        eng.submit(r)
+    while len(eng.queue) or eng.slots.any_active():
+        eng.step()
+        assert eng.last_tick_prefill_tokens <= budget
+        assert eng.last_tick_decode_tokens <= 2
+        assert (eng.last_tick_prefill_tokens
+                + eng.last_tick_decode_tokens) <= budget + 2
+    by_rid = {r.rid: r for r in trace}
+    assert sorted(eng.results) == sorted(by_rid)     # no starvation
+    for rid, res in eng.results.items():
+        assert len(res.tokens) == by_rid[rid].max_new
+        assert res.admitted_step <= res.first_token_step <= res.finished_step
+    alloc = eng.slots.allocator
+    assert alloc.in_use == 0 and alloc.reserved == 0
+
+
 @given(st.integers(0, 2 ** 31 - 1), st.integers(1, 3),
        st.sampled_from([8, 16]))
 @settings(max_examples=5, deadline=None)
