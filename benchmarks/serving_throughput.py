@@ -56,6 +56,15 @@ the chunked run's p99 tick latency is STRICTLY below the monolithic
 run's on the same trace, per-tick prefill tokens never exceed the
 budget, and both pools drain.
 
+The SHARED-PREFIX replay (``shared_prefix``) serves a trace where many
+requests repeat a handful of long system headers (the paper's
+millions-of-users-per-system-prompt shape) twice through the paged
+engine: with ``prefix_cache=True`` (refcounted page sharing +
+copy-on-write) and without.  CI gates (GATE_VERSION 4): the shared run
+is token-exact with the unshared run, its peak KV pool bytes AND its
+total prefill tokens are STRICTLY below the unshared run's, and the
+pool/refcounts fully drain once the prefix index is cleared.
+
 The gates live in ``scripts/check_bench.py`` (run it locally after the
 benchmark: ``python scripts/check_bench.py BENCH_serving.json``).
 
@@ -80,7 +89,7 @@ CW_PERIOD = 40              # decode ticks between window opens
 CW_DURATION = 8             # ticks per window (gap > max max_new so the
                             # restart baseline cannot livelock)
 CW_MAX_STEPS = 20_000       # replay safety valve
-BENCH_VERSION = 3           # bumped when gated keys change (check_bench)
+BENCH_VERSION = 4           # bumped when gated keys change (check_bench)
 
 # overlap replay: denser passes (so long sequences straddle several and
 # re-preemption exercises the KV-delta format) + a staging reserve that
@@ -107,6 +116,19 @@ HT_HEAVY_PROMPTS = (360, 480)
 HT_HEAVY_EVERY = 4          # every 4th request draws from the heavy tail
 HT_MAX_NEW = (4, 16)
 PREFILL_BUDGET = 16         # per-tick prompt-token budget (chunked run)
+
+# shared-prefix replay: SP_N_REQUESTS requests drawn over SP_HEADERS
+# distinct system headers of SP_HEADER_PAGES full pages each — the
+# prefix index can only share FULL prompt pages, so headers are sized
+# in pages.  The pool is deliberately roomy: peak pages then measure
+# the working-set footprint, not the pool cap.
+SP_N_REQUESTS = 16
+SP_HEADERS = 2              # distinct system headers in the trace
+SP_HEADER_PAGES = 2         # header length = 2 full pages (32 tokens)
+SP_TAIL_LENS = (2, 8)       # per-request unique suffix length
+SP_MAX_NEW = (2, 8)
+SP_RATE = 0.6               # arrivals per decode step
+SP_POOL_PAGES = 48
 
 
 def _make_engine_inputs():
@@ -452,6 +474,97 @@ def _chunked_prefill_report(cfg, params):
     }
 
 
+def _shared_prefix_trace(cfg):
+    """Poisson arrivals where every prompt = one of ``SP_HEADERS``
+    shared system headers (``SP_HEADER_PAGES`` full pages) + a short
+    unique tail.  Request 0 of each header is the cold miss that seeds
+    the index; every later reuse is a page-granular hit."""
+    from repro.serving.batching import Request
+
+    rng = np.random.default_rng(11)
+    headers = [rng.integers(1, cfg.vocab_size,
+                            SP_HEADER_PAGES * PAGE_SIZE).astype(np.int32)
+               for _ in range(SP_HEADERS)]
+    t, out = 0.0, []
+    for i in range(SP_N_REQUESTS):
+        t += float(rng.exponential(1.0 / SP_RATE))
+        tail = rng.integers(
+            1, cfg.vocab_size,
+            int(rng.integers(SP_TAIL_LENS[0],
+                             SP_TAIL_LENS[1] + 1))).astype(np.int32)
+        out.append(Request(
+            prompt=np.concatenate([headers[i % SP_HEADERS], tail]),
+            max_new=int(rng.integers(SP_MAX_NEW[0], SP_MAX_NEW[1] + 1)),
+            arrival_t=t))
+    return out
+
+
+def _serve_shared(cfg, params, trace, *, prefix_cache):
+    """One replay of the shared-prefix trace; returns (summary dict,
+    emitted tokens).  Peak KV bytes are the high-water page count times
+    the per-page byte cost — both runs size the pool identically, so
+    the pool-allocation bytes cancel and the peak measures footprint."""
+    from repro.serving.engine import ContinuousEngine
+
+    eng = ContinuousEngine(cfg, params, n_slots=N_SLOTS, max_seq=MAX_SEQ,
+                           kv_layout="paged", page_size=PAGE_SIZE,
+                           pool_pages=SP_POOL_PAGES,
+                           prefix_cache=prefix_cache)
+    t0 = time.perf_counter()
+    results = eng.run(_clone(trace))
+    wall = time.perf_counter() - t0
+    tokens = [results[k].tokens for k in sorted(results)]
+    stats = eng.kv_cache_stats()
+    alloc = eng.slots.allocator
+    live_refs = alloc.n_live_refs()
+    if eng.slots.prefix_index is not None:
+        eng.slots.prefix_index.clear()     # end of life: drop cached pages
+    out = {
+        "useful_tokens": int(sum(len(t) for t in tokens)),
+        "wall_s": round(wall, 4),
+        "prefill_tokens_total": eng.prefill_tokens_total,
+        "kv_peak_bytes": (stats["peak_pages_in_use"]
+                          * (stats["kv_cache_bytes"]
+                             // (SP_POOL_PAGES + 1))),
+        "live_refs_before_clear": live_refs,
+        "pool_drained": (alloc.in_use == 0 and alloc.reserved == 0
+                         and alloc.n_live_refs() == 0),
+        **{k: v for k, v in stats.items() if k != "kv_cache_bytes"},
+    }
+    return out, tokens
+
+
+def _shared_prefix_report(cfg, params):
+    """prefix_cache=True vs =False on the SAME header-heavy trace:
+    token-exact, with the shared run's peak KV bytes and prefill tokens
+    both strictly below the unshared run's."""
+    trace = _shared_prefix_trace(cfg)
+    runs, tokens = {}, {}
+    for name, pc in (("shared", True), ("unshared", False)):
+        _serve_shared(cfg, params, _clone(trace), prefix_cache=pc)  # warm jit
+        runs[name], tokens[name] = _serve_shared(cfg, params, _clone(trace),
+                                                 prefix_cache=pc)
+    return {
+        "trace": {"n_requests": SP_N_REQUESTS, "n_headers": SP_HEADERS,
+                  "header_pages": SP_HEADER_PAGES,
+                  "tail_lens": list(SP_TAIL_LENS),
+                  "max_new": list(SP_MAX_NEW),
+                  "pool_pages": SP_POOL_PAGES},
+        "shared": runs["shared"],
+        "unshared": runs["unshared"],
+        "token_exact": (len(tokens["shared"]) == len(tokens["unshared"])
+                        and all(np.array_equal(a, b)
+                                for a, b in zip(tokens["shared"],
+                                                tokens["unshared"]))),
+        "kv_peak_bytes_ratio": round(
+            runs["shared"]["kv_peak_bytes"]
+            / max(runs["unshared"]["kv_peak_bytes"], 1), 4),
+        "prefill_tokens_ratio": round(
+            runs["shared"]["prefill_tokens_total"]
+            / max(runs["unshared"]["prefill_tokens_total"], 1), 4),
+    }
+
+
 def run():
     import jax
     from repro.models import transformer as T
@@ -501,6 +614,7 @@ def run():
                                     tokens_seen["continuous"])
     out["contact_window"] = cw
     out["chunked_prefill"] = _chunked_prefill_report(cfg, params)
+    out["shared_prefix"] = _shared_prefix_report(cfg, params)
     out["bench_version"] = BENCH_VERSION
     rows.append(("serving_contact_window_preemptive",
                  cw["preemptive"]["wall_s"] * 1e6
@@ -526,6 +640,15 @@ def run():
                       cp["monolithic"]["tick_latency_p99_s"] * 1e6, 1),
                   "token_exact": cp["token_exact"],
                   "ttft_mean_steps": cp["chunked"]["ttft_mean_steps"]}))
+    sp = out["shared_prefix"]
+    rows.append(("serving_shared_prefix",
+                 sp["shared"]["wall_s"] * 1e6
+                 / max(sp["shared"]["useful_tokens"], 1),
+                 {"prefill_tokens_ratio": sp["prefill_tokens_ratio"],
+                  "kv_peak_bytes_ratio": sp["kv_peak_bytes_ratio"],
+                  "prefix_hits": sp["shared"]["prefix_hits"],
+                  "cow_page_copies": sp["shared"]["cow_page_copies"],
+                  "token_exact": sp["token_exact"]}))
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     with open(os.path.join(root, "BENCH_serving.json"), "w") as f:
         json.dump(out, f, indent=2, sort_keys=True)

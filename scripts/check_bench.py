@@ -27,7 +27,12 @@ Gates:
     run, chunked p99 tick latency STRICTLY below monolithic on the
     same trace, per-tick prefill tokens bounded by the budget (and the
     monolithic run genuinely unbounded — the comparator is real),
-    pools drained.
+    pools drained;
+  * shared_prefix — refcounted prefix sharing + copy-on-write on the
+    header-heavy trace: shared replay token-exact with the unshared
+    one, peak KV pool bytes AND total prefill tokens STRICTLY below
+    the unshared replay's, prefix hits really observed, and the pool
+    and refcounts fully drained once the index is cleared.
 
 Each gate prints PASS/FAIL; the exit code is non-zero if any failed.
 """
@@ -36,7 +41,7 @@ from __future__ import annotations
 import json
 import sys
 
-GATE_VERSION = 3
+GATE_VERSION = 4
 
 
 class Gates:
@@ -159,6 +164,32 @@ def check_chunked_prefill(g: Gates, cp: dict) -> None:
     g.check("monolithic pool drained", mono["pool_drained"] is True)
 
 
+def check_shared_prefix(g: Gates, sp: dict) -> None:
+    sh, un = sp["shared"], sp["unshared"]
+    g.check("shared replay token-exact with unshared",
+            sp["token_exact"] is True)
+    # the tentpole: attaching cached header pages by reference must
+    # shrink BOTH the memory footprint and the recomputed prompt work
+    g.check("shared peak KV bytes < unshared peak KV bytes",
+            sh["kv_peak_bytes"] < un["kv_peak_bytes"],
+            f"{sh['kv_peak_bytes']} vs {un['kv_peak_bytes']}")
+    g.check("shared prefill tokens < unshared prefill tokens",
+            sh["prefill_tokens_total"] < un["prefill_tokens_total"],
+            f"{sh['prefill_tokens_total']} vs {un['prefill_tokens_total']}")
+    # the sharing machinery really engaged (not a vacuous comparison)
+    g.check("prefix-cache hits observed", sh["prefix_hits"] > 0,
+            f"n={sh['prefix_hits']}")
+    g.check("prompt positions skipped by reference",
+            sh["prefill_positions_skipped"] > 0,
+            f"n={sh['prefill_positions_skipped']}")
+    # end of life: clearing the index must return every shared page —
+    # refcounts hit zero exactly once per page or the pool can't drain
+    g.check("shared pool + refcounts drained after index clear",
+            sh["pool_drained"] is True,
+            f"live_refs_before_clear={sh['live_refs_before_clear']}")
+    g.check("unshared pool drained", un["pool_drained"] is True)
+
+
 def main(argv) -> int:
     path = argv[1] if len(argv) > 1 else "BENCH_serving.json"
     with open(path) as f:
@@ -176,6 +207,7 @@ def main(argv) -> int:
     check_contact_window(g, bench["contact_window"])
     check_overlap(g, bench["contact_window"]["overlap"])
     check_chunked_prefill(g, bench["chunked_prefill"])
+    check_shared_prefix(g, bench["shared_prefix"])
     print(f"\n{'OK' if not g.failures else 'FAILED'}: "
           f"{g.failures} gate(s) failed ({path}, gate v{GATE_VERSION})")
     return 1 if g.failures else 0

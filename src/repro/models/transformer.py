@@ -741,7 +741,9 @@ def graft_paged_cache(cache: dict, prefix_cache: dict, page_ids,
     the delta half of the KV-delta spill format — a re-resumed sequence
     whose leading pages are already device-resident (or already grafted
     from a base snapshot) grafts only the pages dirtied since the last
-    spill, and base + delta reassemble token-exactly."""
+    spill, and base + delta reassemble token-exactly.  A shared-prefix
+    resume passes only its private page ids here: the shared prefix
+    never left the pool, so nothing is grafted over it."""
     if since:
         page_ids = page_ids[since:]
     def graft(pool, small):
@@ -773,7 +775,12 @@ def extract_paged_cache(cache: dict, page_ids, since: int = 0) -> dict:
     ``since`` (static) gathers only ``page_ids[since:]`` — the pages
     dirtied since a previous spill epoch.  Re-preempting a long sequence
     then ships only its new pages; the host store keeps the clean prefix
-    from the earlier spill (``serving.paging.DeltaSpillStore``)."""
+    from the earlier spill (``serving.paging.DeltaSpillStore``).  The
+    same slicing marks a SHARED-prefix boundary: a sequence holding
+    prefix-index pages spills with ``since >= shared_pages`` so pages
+    still referenced elsewhere are never re-shipped — they stay pinned
+    in the pool and the resume grafts only the private tail after
+    them."""
     if since:
         page_ids = page_ids[since:]
     def gather(pool):
@@ -781,6 +788,19 @@ def extract_paged_cache(cache: dict, page_ids, since: int = 0) -> dict:
         L, n, ps = sm.shape[:3]
         return sm.reshape(L, 1, n * ps, *sm.shape[3:])
     return jax.tree.map(gather, cache)
+
+
+def copy_paged_pages(cache: dict, src_ids, dst_ids) -> dict:
+    """Duplicate pages ``src_ids`` of the paged pool into ``dst_ids``
+    (both (n,) int32) — the device-side half of copy-on-write forking.
+    A sequence about to write into a page it shares with the prefix
+    index (refcount > 1) first copies the page into a private one drawn
+    from its own reservation, then redirects its block table; whole
+    pages move, so the fork is bit-exact with the shared original and
+    no other holder ever observes the write."""
+    def cp(pool):
+        return pool.at[:, dst_ids].set(pool[:, src_ids])
+    return jax.tree.map(cp, cache)
 
 
 def extract_slot_cache(cache: dict, template: dict, slot) -> dict:

@@ -56,8 +56,8 @@ from repro.config import ModelConfig
 from repro.models import moe as M
 from repro.models import transformer as T
 from repro.serving.batching import Request, RequestQueue
-from repro.serving.paging import (BlockAllocator, default_pool_pages,
-                                  pages_for)
+from repro.serving.paging import (BlockAllocator, PagePrefixIndex,
+                                  default_pool_pages, pages_for)
 
 # Jitted engine callables shared across engine instances serving the
 # same (hashable, frozen) ModelConfig: benchmark A/B replays and test
@@ -290,7 +290,8 @@ class SlotManager(_SlotOccupancy):
         return True                    # a free slot is the only resource
 
     def place(self, slot: int, prefix_cache, state: _SlotState) -> None:
-        assert self.states[slot] is None, f"slot {slot} occupied"
+        if self.states[slot] is not None:
+            raise RuntimeError(f"slot {slot} occupied")
         self.cache = self._graft(self.cache, prefix_cache, jnp.int32(slot))
         self.states[slot] = state
 
@@ -313,6 +314,10 @@ class SlotManager(_SlotOccupancy):
         self.states[slot] = None
         return st
 
+    def discard_detached(self, state: _SlotState) -> None:
+        """Drop a detached sequence for good — no pooled resource to
+        return in the contiguous layout."""
+
     def can_restore(self, state: _SlotState, spilled: bool) -> bool:
         return True
 
@@ -320,8 +325,10 @@ class SlotManager(_SlotOccupancy):
                 spilled: bool = True) -> None:
         """Re-place a detached sequence; ``kv`` is a ``snapshot`` pytree
         (required here: the row may have been reused since detach)."""
-        assert self.states[slot] is None, f"slot {slot} occupied"
-        assert kv is not None, "contiguous restore needs the KV snapshot"
+        if self.states[slot] is not None:
+            raise RuntimeError(f"slot {slot} occupied")
+        if kv is None:
+            raise RuntimeError("contiguous restore needs the KV snapshot")
         self.cache = self._graft(self.cache, jax.tree.map(jnp.asarray, kv),
                                  jnp.int32(slot))
         self.states[slot] = state
@@ -333,11 +340,18 @@ class SlotManager(_SlotOccupancy):
 @dataclass
 class _PagedSlotState(_SlotState):
     pages: List[int] = field(default_factory=list)   # block table
-    budget: int = 0                    # lifetime pages reserved
+    budget: int = 0                    # lifetime PRIVATE pages reserved
+    #                                    (shared-attached pages cost no
+    #                                    reservation — they are already
+    #                                    in use elsewhere)
     synced_pages: int = 0              # leading pages bit-identical to the
     #                                    host spill store (KV-delta spills):
     #                                    decode writes lower the watermark,
     #                                    a spill/resume raises it
+    shared_pages: int = 0              # leading pages attached by reference
+    #                                    from the prefix index; a write into
+    #                                    one forks a private copy first
+    #                                    (copy-on-write) and lowers this
 
 
 class PagedSlotManager(_SlotOccupancy):
@@ -358,7 +372,8 @@ class PagedSlotManager(_SlotOccupancy):
     """
 
     def __init__(self, cfg: ModelConfig, n_slots: int, max_seq: int, *,
-                 page_size: int = 16, pool_pages: Optional[int] = None):
+                 page_size: int = 16, pool_pages: Optional[int] = None,
+                 prefix_cache: bool = False):
         self.cfg = cfg
         self.n_slots = n_slots
         self.max_seq = max_seq
@@ -366,18 +381,51 @@ class PagedSlotManager(_SlotOccupancy):
         if pool_pages is None:
             pool_pages = default_pool_pages(n_slots, max_seq, page_size)
         self.allocator = BlockAllocator(pool_pages)
+        self.prefix_index = (PagePrefixIndex(self.allocator, page_size)
+                             if prefix_cache else None)
+        self.cow_copies = 0            # shared pages forked before a write
+        self.prefill_positions_skipped = 0   # prompt positions attached by
+        #                                      reference (never recomputed)
         self.max_bt = pages_for(max_seq, page_size)
         self.cache = T.init_paged_cache(cfg, pool_pages + 1, page_size)
         self.states: List[Optional[_PagedSlotState]] = [None] * n_slots
         self._graft = jax.jit(T.graft_paged_cache)
         self._extract = jax.jit(T.extract_paged_cache)
+        self._copy = jax.jit(T.copy_paged_pages)
 
     def _lifetime_pages(self, req: Request) -> int:
         return req.pages_needed(self.page_size)
 
+    def _prefix_plan(self, req: Request):
+        """(cached page ids to attach, resume position, private page
+        budget) for admitting ``req``.  Attaches the longest indexed
+        run of the prompt's leading FULL pages; prefill then resumes at
+        the first uncovered position and is charged only for what it
+        actually runs.  A fully covered prompt still re-runs its final
+        position — the first emitted token needs that position's logits
+        — which copy-on-writes the last shared page, budgeted as one
+        extra private page."""
+        lifetime = self._lifetime_pages(req)
+        if self.prefix_index is None or req.prefill_pos:
+            return [], req.prefill_pos, lifetime
+        prompt = req.prompt
+        pages = self.prefix_index.match(prompt)
+        k = min(len(pages), len(prompt) // self.page_size)
+        pages = pages[:k]
+        if k and k * self.page_size == len(prompt):
+            return pages, len(prompt) - 1, lifetime - k + 1
+        return pages, k * self.page_size, lifetime - k
+
     # -- admission / eviction ----------------------------------------------
     def can_admit(self, req: Request) -> bool:
-        return self.allocator.can_reserve(self._lifetime_pages(req))
+        _, _, budget = self._prefix_plan(req)
+        if self.allocator.can_reserve(budget):
+            return True
+        # index-only pages (refcount 1) are reclaimable: admission may
+        # evict cached prefixes rather than block behind them
+        return (self.prefix_index is not None
+                and self.allocator.available()
+                + self.prefix_index.reclaimable() >= budget)
 
     def fits_pool(self, req: Request) -> bool:
         """Whether the request could EVER be admitted (pool capacity)."""
@@ -385,33 +433,90 @@ class PagedSlotManager(_SlotOccupancy):
 
     def place_prefilling(self, slot: int, req: Request, clock: int) -> None:
         """Open ``slot`` in the PREFILLING state: reserve the request's
-        worst-case lifetime page budget (admission control is unchanged)
-        but allocate nothing — prompt chunks allocate their pages as
-        they land (``grow_for_chunk``), and no prefix cache is ever
-        grafted."""
-        assert self.states[slot] is None, f"slot {slot} occupied"
+        worst-case lifetime budget of PRIVATE pages (admission control
+        is unchanged when nothing is shared) but allocate nothing —
+        prompt chunks allocate their pages as they land
+        (``grow_for_chunk``), and no prefix cache is ever grafted.
+        With a prefix index, cache-hit pages attach by reference: the
+        model work for the covered positions is skipped outright
+        (``Request.prefill_pos`` opens past them, so the unified step
+        charges 0 prefill tokens for them) and the shared pages cost no
+        reservation."""
+        if self.states[slot] is not None:
+            raise RuntimeError(f"slot {slot} occupied")
+        pages, resume, budget = self._prefix_plan(req)
+        if not self.allocator.can_reserve(budget) and self.prefix_index:
+            self.prefix_index.evict(budget - self.allocator.available())
+        self.allocator.reserve(budget)
+        self.allocator.share(pages)
+        if self.prefix_index is not None and not req.prefill_pos:
+            self.prefix_index.note_attach(len(pages))
+        if pages:
+            self.prefill_positions_skipped += resume
+        req.prefill_pos = resume
         self.states[slot] = _PagedSlotState(
-            request=req, pos=req.prefill_pos, next_tok=0,
-            admitted_step=clock, phase=PREFILLING,
-            budget=self._lifetime_pages(req))
-        self.allocator.reserve(self.states[slot].budget)
+            request=req, pos=resume, next_tok=0,
+            admitted_step=clock, phase=PREFILLING, pages=list(pages),
+            budget=budget, synced_pages=len(pages),
+            shared_pages=len(pages))
+
+    def _fork_shared(self, slot: int, first_write: int) -> None:
+        """Copy-on-write: before ``slot`` writes into page
+        ``first_write``, give it private copies of every shared page
+        from there on (in practice only the last shared page, when a
+        fully covered prompt re-runs its final position).  A page still
+        referenced elsewhere is duplicated device-side
+        (``copy_paged_pages``) into a page drawn from the slot's own
+        reservation and this sequence's reference on the original is
+        dropped; a page nobody else holds any more is simply
+        reclassified as private."""
+        st = self.states[slot]
+        if first_write >= st.shared_pages:
+            return
+        for d in range(first_write, st.shared_pages):
+            old = st.pages[d]
+            if self.allocator.refcount(old) > 1:
+                new = self.allocator.alloc(1)[0]
+                self.cache = self._copy(self.cache,
+                                        jnp.asarray([old], jnp.int32),
+                                        jnp.asarray([new], jnp.int32))
+                st.pages[d] = new
+                self.allocator.release([old])
+                self.cow_copies += 1
+        st.shared_pages = first_write
+        st.synced_pages = min(st.synced_pages, first_write)
 
     def grow_for_chunk(self, slot: int, n_positions: int) -> None:
         """Allocate pages (against the admission reservation) so the
         slot's block table covers prompt positions [0, n_positions),
-        and lower the ``synced_pages`` watermark to the first page this
-        chunk writes into — those pages now diverge from any host spill
-        copy."""
+        forking any shared page the chunk would write into
+        (copy-on-write), and lower the ``synced_pages`` watermark to
+        the first page this chunk writes — those pages now diverge from
+        any host spill copy."""
         st = self.states[slot]
         first_write = st.pos // self.page_size
+        self._fork_shared(slot, first_write)
         while len(st.pages) * self.page_size < n_positions:
             st.pages.extend(self.allocator.alloc(1))
         st.synced_pages = min(st.synced_pages, first_write)
 
+    def note_prefill_complete(self, slot: int) -> None:
+        """Register the sequence's IMMUTABLE prompt pages (fully covered
+        by the prompt — decode never writes into them) in the prefix
+        index, so later requests sharing the prefix attach them by
+        reference instead of recomputing."""
+        if self.prefix_index is None:
+            return
+        st = self.states[slot]
+        prompt = st.request.prompt
+        self.prefix_index.insert(prompt,
+                                 st.pages[:len(prompt) // self.page_size])
+
     def evict(self, slot: int) -> None:
         st = self.states[slot]
+        n_private = len(st.pages) - st.shared_pages
         self.allocator.release(st.pages,
-                               unreserve=st.budget - len(st.pages))
+                               unreserve=st.budget - n_private)
         self.states[slot] = None
 
     # -- preemption (snapshot / detach / restore) ---------------------------
@@ -434,18 +539,32 @@ class PagedSlotManager(_SlotOccupancy):
 
     def detach(self, slot: int, *, release_pages: bool) -> _PagedSlotState:
         """Remove the slot's state without finishing it.  With
-        ``release_pages`` (spill preemption) the sequence's pages AND its
-        unused reservation go back to the pool — reclaimable by waiting
-        requests — and the caller must hold a ``snapshot``; without
-        (resident preemption) the pages stay committed and restore is
-        free."""
+        ``release_pages`` (spill preemption) the sequence's PRIVATE
+        pages and its unused reservation go back to the pool —
+        reclaimable by waiting requests — and the caller must hold a
+        ``snapshot`` of them; shared-prefix pages keep this sequence's
+        reference (they are pinned in the pool, never spilled, and cost
+        nothing to re-attach at resume).  Without (resident preemption)
+        everything stays committed and restore is free."""
         st = self.states[slot]
         self.states[slot] = None
         if release_pages:
-            self.allocator.release(st.pages,
-                                   unreserve=st.budget - len(st.pages))
-            st.pages = []
+            private = st.pages[st.shared_pages:]
+            self.allocator.release(private,
+                                   unreserve=st.budget - len(private))
+            st.pages = st.pages[:st.shared_pages]
         return st
+
+    def discard_detached(self, state: _PagedSlotState) -> None:
+        """Drop a detached (spilled) sequence without resuming it — the
+        redo-from-prefill path.  Releases the shared-prefix references
+        the spill kept pinned; private pages and reservation were
+        already returned at detach."""
+        if state.pages:
+            self.allocator.release(state.pages)
+            state.pages = []
+        state.shared_pages = 0
+        state.synced_pages = 0
 
     def can_restore(self, state: _PagedSlotState, spilled: bool) -> bool:
         """Spilled sequences re-reserve their full lifetime budget, so a
@@ -456,20 +575,24 @@ class PagedSlotManager(_SlotOccupancy):
     def restore(self, slot: int, state: _PagedSlotState, kv=None, *,
                 spilled: bool = True) -> None:
         """Re-place a detached sequence.  ``spilled`` re-reserves the
-        lifetime budget (the detach released it); ``kv`` is the host
-        snapshot to graft into freshly allocated pages — None for a
-        resident swap, or for a sequence preempted before its first
-        prefill chunk landed (nothing to restore: chunks redo)."""
-        assert self.states[slot] is None, f"slot {slot} occupied"
+        private lifetime budget (the detach released it); ``kv`` is the
+        host snapshot of the PRIVATE pages, grafted into freshly
+        allocated ones appended after the still-attached shared prefix
+        — None for a resident swap, or for a sequence preempted before
+        its first private page landed (nothing to restore: chunks
+        redo)."""
+        if self.states[slot] is not None:
+            raise RuntimeError(f"slot {slot} occupied")
         if spilled:
             self.allocator.reserve(state.budget)
             if kv is not None:                 # realloc + graft back
                 leaf = jax.tree.leaves(kv)[0]
                 n = leaf.shape[2] // self.page_size
-                state.pages = self.allocator.alloc(n)
+                new = self.allocator.alloc(n)
+                state.pages.extend(new)
                 self.cache = self._graft(self.cache,
                                          jax.tree.map(jnp.asarray, kv),
-                                         jnp.asarray(state.pages, jnp.int32))
+                                         jnp.asarray(new, jnp.int32))
         self.states[slot] = state
 
     # -- paged decode plumbing ---------------------------------------------
@@ -481,10 +604,13 @@ class PagedSlotManager(_SlotOccupancy):
         diverges from any host spill copy, so the next spill must ship
         it again (everything below the watermark stays delta-exempt).
         PREFILLING slots are skipped: their pages grow chunk-by-chunk
-        through ``grow_for_chunk``."""
-        for st in self.states:
+        through ``grow_for_chunk``.  A write landing in a shared page
+        forks a private copy first (copy-on-write) — no decode write
+        ever touches a page another holder can read."""
+        for slot, st in enumerate(self.states):
             if st is None or st.phase != DECODING:
                 continue
+            self._fork_shared(slot, st.pos // self.page_size)
             while len(st.pages) <= st.pos // self.page_size:
                 st.pages.extend(self.allocator.alloc(1))
             st.synced_pages = min(st.synced_pages, st.pos // self.page_size)
@@ -517,6 +643,10 @@ class PagedSlotManager(_SlotOccupancy):
             "peak_pages_in_use": a.peak_in_use,
             "peak_pages_committed": a.peak_committed,
             "page_pool_utilization": round(a.utilization(), 4),
+            "cow_page_copies": self.cow_copies,
+            "prefill_positions_skipped": self.prefill_positions_skipped,
+            **(self.prefix_index.stats()
+               if self.prefix_index is not None else {}),
             **super().kv_cache_stats(),
         }
 
@@ -557,6 +687,17 @@ class ContinuousEngine:
     are the paged pool's sizing knobs (pool_pages defaults to 75% of
     the contiguous layout's positions; see ``paging.default_pool_pages``).
 
+    prefix_cache=True (paged only) turns on prefix sharing: a
+    ``paging.PagePrefixIndex`` keeps finished prompts' immutable full
+    pages alive in the pool, admission attaches matching leading pages
+    by REFERENCE (refcounted — shared pages are not double-budgeted)
+    and skips the model work for the covered positions entirely (they
+    charge 0 tokens against the unified step's prefill budget; a fully
+    covered prompt still re-runs its final position for the first
+    token's logits, copy-on-write-forking the last shared page).
+    Token-exact with prefix_cache=False: cached pages hold exactly the
+    KV the skipped chunks would have recomputed.
+
     ``last_tick_prefill_tokens`` / ``last_tick_decode_tokens`` expose
     the unified step's per-tick token accounting (prefill tokens spent;
     decoding slots stepped) — the benchmark and the property suite
@@ -570,7 +711,8 @@ class ContinuousEngine:
                  max_seq: int = 2048, queue_capacity: Optional[int] = None,
                  kv_layout: str = "auto", page_size: int = 16,
                  pool_pages: Optional[int] = None,
-                 prefill_budget_tokens: Optional[int] = 64):
+                 prefill_budget_tokens: Optional[int] = 64,
+                 prefix_cache: bool = False):
         if cfg.family not in self.FAMILIES:
             raise NotImplementedError(
                 f"ContinuousEngine does not serve family {cfg.family!r}")
@@ -582,6 +724,9 @@ class ContinuousEngine:
         if prefill_budget_tokens is not None and prefill_budget_tokens < 1:
             raise ValueError("prefill_budget_tokens must be >= 1 (or None "
                              "for an unbounded, monolithic-style tick)")
+        if prefix_cache and kv_layout != "paged":
+            raise ValueError("prefix_cache needs the paged KV layout "
+                             "(sharing is page-granular)")
         self.cfg = cfg
         self.params = params
         self.max_seq = max_seq
@@ -590,7 +735,8 @@ class ContinuousEngine:
         if kv_layout == "paged":
             self.slots = PagedSlotManager(cfg, n_slots, max_seq,
                                           page_size=page_size,
-                                          pool_pages=pool_pages)
+                                          pool_pages=pool_pages,
+                                          prefix_cache=prefix_cache)
             self._decode = _cached_jit(("cont_decode_paged", cfg), lambda: jax.jit(
                 lambda p, c, t, pos, bt: T.decode_step(
                     p, cfg, c, t, pos, block_tables=bt)))
@@ -609,6 +755,8 @@ class ContinuousEngine:
         self.results: Dict[int, RequestResult] = {}
         self.last_tick_prefill_tokens = 0
         self.last_tick_decode_tokens = 0
+        self.prefill_tokens_total = 0         # prompt tokens actually run
+        #                                       (prefix-cache hits charge 0)
         self._spent_this_tick = 0
         self._tick_budget_left = self._budget()
         self._prefill = _cached_jit(("cont_prefill", cfg), lambda: jax.jit(
@@ -735,6 +883,7 @@ class ContinuousEngine:
             st.pos = off + C
             self._tick_budget_left -= C
             self._spent_this_tick += C
+            self.prefill_tokens_total += C
             if req.prefill_pos >= S:
                 first = int(jnp.argmax(logits[0, C - 1]))
                 st.phase = DECODING
@@ -742,6 +891,7 @@ class ContinuousEngine:
                 st.emitted = [first]
                 st.first_token_step = self.clock
                 st.last_logits = np.asarray(logits[0, C - 1], np.float32)
+                self.slots.note_prefill_complete(slot)
                 if len(st.emitted) >= req.max_new:
                     self._finish(slot)
 

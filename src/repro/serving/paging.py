@@ -7,6 +7,13 @@ every ``page_size`` generated tokens) and returned to the free list on
 eviction.  Memory therefore scales with ``sum_i ceil(len_i/page_size)``
 instead of ``n_slots * max_seq``.
 
+Pages are refcounted so immutable prompt pages can be SHARED: a
+``PagePrefixIndex`` (radix trie keyed on page-granular token runs)
+maps full prompt pages to page ids, letting sequences with a common
+prefix attach cache-hit pages by reference instead of recomputing
+them; the first write into a shared page forks a private copy
+(copy-on-write, in ``serving.engine.PagedSlotManager``).
+
 Admission uses a *reservation* discipline so decode can never stall on
 an empty pool: a request is only admitted when its worst-case lifetime
 page count (``ceil((prompt + max_new - 1)/page_size)``) can be reserved
@@ -56,7 +63,16 @@ class PoolExhausted(RuntimeError):
 
 class BlockAllocator:
     """Free-list allocator over ``n_pages`` KV pages (ids 1..n_pages;
-    id 0 is the scratch page and is never handed out)."""
+    id 0 is the scratch page and is never handed out).
+
+    Pages are REFCOUNTED: ``alloc`` hands a page out with one
+    reference, ``share`` adds holders (prefix sharing — several block
+    tables pointing at the same immutable prompt page), and ``release``
+    drops one reference per listed id.  A page returns to the free list
+    only when its refcount reaches zero, so ``in_use`` counts DISTINCT
+    live pages (``len(_free) == n_pages - in_use`` always holds) while
+    shared pages cost the pool — and the reservation ledger — only
+    once."""
 
     def __init__(self, n_pages: int):
         if n_pages < 1:
@@ -64,6 +80,7 @@ class BlockAllocator:
         self.n_pages = n_pages
         self._free: Deque[int] = collections.deque(range(1, n_pages + 1))
         self._free_set = set(self._free)   # double-release detection
+        self._refcount: Dict[int, int] = {}   # live page -> holders
         self.reserved = 0                  # promised but not yet allocated
         self.in_use = 0
         self.peak_in_use = 0
@@ -93,29 +110,213 @@ class BlockAllocator:
                 f"free {len(self._free)}")
         ids = [self._free.popleft() for _ in range(n)]
         self._free_set.difference_update(ids)
+        for i in ids:
+            self._refcount[i] = 1
         self.reserved -= n
         self.in_use += n
         self.peak_in_use = max(self.peak_in_use, self.in_use)
         return ids
 
+    # -- sharing (prefix cache) ---------------------------------------------
+    def share(self, ids: List[int]) -> None:
+        """Add one holder to each live page in ``ids`` (a block table —
+        or the prefix index — attaching cached pages by reference).
+        Consumes no reservation: the pages are already in use, and the
+        new holder's ``release`` merely drops its reference."""
+        for i in ids:
+            if not 1 <= i <= self.n_pages or i in self._free_set:
+                raise PoolExhausted(f"share of invalid/free page {i}")
+        for i in ids:
+            self._refcount[i] += 1
+
+    def refcount(self, i: int) -> int:
+        """Current holders of page ``i`` (0 when free)."""
+        return self._refcount.get(i, 0)
+
+    def n_live_refs(self) -> int:
+        """Total outstanding references across all live pages — 0 iff
+        every holder released everything (the drain gate)."""
+        return sum(self._refcount.values())
+
     def release(self, ids: List[int], unreserve: int = 0) -> None:
-        """Return ``ids`` to the free list and drop ``unreserve`` pages
-        of never-allocated reservation (eviction before max_new)."""
+        """Drop one reference per page in ``ids``; pages reaching
+        refcount zero return to the free list.  ``unreserve`` drops that
+        many pages of never-allocated reservation (eviction before
+        max_new)."""
+        freed = []
         for i in ids:
             if not 1 <= i <= self.n_pages or i in self._free_set:
                 # a double-released page would later be handed to two
                 # live sequences — silent KV corruption, so fail loudly
                 raise PoolExhausted(f"release of invalid/free page {i}")
-        self._free.extend(ids)
-        self._free_set.update(ids)
-        self.in_use -= len(ids)
+            rc = self._refcount[i] - 1
+            if rc:
+                self._refcount[i] = rc
+            else:
+                del self._refcount[i]
+                freed.append(i)
+                self._free.append(i)
+                self._free_set.add(i)
+        self.in_use -= len(freed)
         self.reserved -= unreserve
-        assert self.in_use >= 0 and self.reserved >= 0
+        if self.in_use < 0 or self.reserved < 0:
+            raise PoolExhausted(
+                f"accounting went negative (in_use={self.in_use}, "
+                f"reserved={self.reserved}) — over-release or bad unreserve")
 
     # -- stats --------------------------------------------------------------
     def utilization(self) -> float:
         """Peak fraction of the pool ever holding live KV."""
         return self.peak_in_use / self.n_pages
+
+
+# ==========================================================================
+# prefix sharing: radix index over full prompt pages
+# ==========================================================================
+
+class PagePrefixIndex:
+    """Radix (trie) index mapping FULL prompt pages to pooled page ids.
+
+    Level ``d`` of the trie is keyed by the tuple of token ids filling
+    prompt page ``d``, so a lookup walks a prompt page-by-page and
+    returns the longest run of leading pages whose KV is already
+    resident in the pool.  Only IMMUTABLE pages are ever indexed —
+    pages fully covered by a prompt (decode never writes into them),
+    registered when their sequence finishes prefill.
+
+    The index holds ONE allocator reference per indexed page (via
+    ``BlockAllocator.share``), so cached pages survive the sequences
+    that produced them; each attaching sequence adds its own reference
+    and a page only frees once the index AND every sequence released
+    it.  ``reclaimable``/``evict`` let admission reclaim index-only
+    pages (refcount 1) leaf-first when the pool runs dry — evicting a
+    leaf can cascade to its (now-leaf) ancestors, never the other way,
+    so the trie's prefix property is preserved.  ``clear`` drops every
+    index reference (the benchmark's refcount-drain gate)."""
+
+    def __init__(self, allocator: BlockAllocator, page_size: int):
+        self.allocator = allocator
+        self.page_size = page_size
+        # node: key (page-token tuple) -> [page_id, children, lru_stamp]
+        self._root: Dict[tuple, list] = {}
+        self._clock = 0
+        self.n_pages = 0            # pages currently holding an index ref
+        self.hits = 0               # admissions that attached >= 1 page
+        self.misses = 0
+        self.pages_attached = 0     # pages attached by reference, total
+        self.pages_evicted = 0
+
+    def _keys(self, tokens) -> List[tuple]:
+        ps = self.page_size
+        return [tuple(int(t) for t in tokens[d * ps:(d + 1) * ps])
+                for d in range(len(tokens) // ps)]
+
+    def match(self, tokens) -> List[int]:
+        """Page ids of the longest indexed run of ``tokens``'s leading
+        full pages.  Read-only: takes no references — the caller
+        attaches via ``BlockAllocator.share``."""
+        self._clock += 1
+        node, out = self._root, []
+        for key in self._keys(tokens):
+            ent = node.get(key)
+            if ent is None:
+                break
+            ent[2] = self._clock
+            out.append(ent[0])
+            node = ent[1]
+        return out
+
+    def note_attach(self, n_pages: int) -> None:
+        """Hit/miss accounting for one admission lookup."""
+        if n_pages:
+            self.hits += 1
+            self.pages_attached += n_pages
+        else:
+            self.misses += 1
+
+    def insert(self, tokens, pages: List[int]) -> int:
+        """Index the leading full pages of ``tokens`` (their KV living
+        in ``pages``).  Already-indexed prefixes keep their existing
+        page (first writer wins — both copies are bit-identical, built
+        from the same token prefix).  Takes one index reference per
+        NEWLY indexed page; returns how many were new."""
+        self._clock += 1
+        node, added = self._root, 0
+        for d, key in enumerate(self._keys(tokens)):
+            ent = node.get(key)
+            if ent is None:
+                self.allocator.share([pages[d]])
+                ent = node[key] = [pages[d], {}, self._clock]
+                self.n_pages += 1
+                added += 1
+            else:
+                ent[2] = self._clock
+            node = ent[1]
+        return added
+
+    def reclaimable(self) -> int:
+        """Pages a cascade of leaf evictions could free right now:
+        index-only pages (refcount 1) whose whole subtree is likewise
+        evictable."""
+        def count(node) -> tuple:
+            n, full = 0, True
+            for ent in node.values():
+                sub_n, sub_full = count(ent[1])
+                n += sub_n
+                ok = sub_full and self.allocator.refcount(ent[0]) == 1
+                n += int(ok)
+                full = full and ok
+            return n, full
+        return count(self._root)[0]
+
+    def _evictable_leaves(self) -> List[tuple]:
+        """(lru_stamp, page_id, key, parent) for every leaf node whose
+        page only the index still references."""
+        out, stack = [], [self._root]
+        while stack:
+            node = stack.pop()
+            for key, ent in node.items():
+                if ent[1]:
+                    stack.append(ent[1])
+                elif self.allocator.refcount(ent[0]) == 1:
+                    out.append((ent[2], ent[0], key, node))
+        return out
+
+    def evict(self, n: int) -> int:
+        """Free up to ``n`` index-only pages, least-recently-used leaf
+        first (an emptied parent becomes evictable next round); returns
+        how many were actually freed."""
+        freed = 0
+        while freed < n:
+            cands = sorted(self._evictable_leaves(), key=lambda c: c[:2])
+            if not cands:
+                break
+            for _, page, key, parent in cands[:n - freed]:
+                del parent[key]
+                self.allocator.release([page])
+                self.n_pages -= 1
+                self.pages_evicted += 1
+                freed += 1
+        return freed
+
+    def clear(self) -> None:
+        """Drop every index reference (end-of-run drain)."""
+        def drop(node):
+            for ent in node.values():
+                drop(ent[1])
+                self.allocator.release([ent[0]])
+            node.clear()
+        drop(self._root)
+        self.n_pages = 0
+
+    def stats(self) -> dict:
+        return {
+            "prefix_index_pages": self.n_pages,
+            "prefix_hits": self.hits,
+            "prefix_misses": self.misses,
+            "prefix_pages_attached": self.pages_attached,
+            "prefix_pages_evicted": self.pages_evicted,
+        }
 
 
 # ==========================================================================
@@ -260,10 +461,16 @@ class DeltaSpillStore:
         rec = self._by_rid.get(rid)
         base = self._unpack(rec.kv) if rec is not None else None
         if rec is None or synced == 0:
-            assert delta is not None and synced == 0, (rid, synced)
+            if delta is None or synced != 0:
+                raise RuntimeError(
+                    f"spill of rid {rid}: no base record yet its delta "
+                    f"starts at page {synced} — stale synced watermark")
             merged = delta
         elif delta is None:                      # re-spill with no new pages
-            assert synced == total_pages, (synced, total_pages)
+            if synced != total_pages:
+                raise RuntimeError(
+                    f"spill of rid {rid}: empty delta but only {synced} of "
+                    f"{total_pages} pages are synced")
             merged = base
         else:
             merged = jax.tree.map(
@@ -299,13 +506,32 @@ class DeltaSpillStore:
         if rec is not None:
             self.stored_bytes -= rec.nbytes
 
-    def stats(self) -> dict:
+    @staticmethod
+    def empty_stats() -> dict:
+        """The all-zero stats schema.  ``stats()`` fills exactly these
+        keys, and the scheduler's no-store path returns this directly —
+        ONE schema, so a new stat key can never drift between the two
+        (it used to be a hand-duplicated dict that only broke on the
+        no-store path)."""
         return {
-            "n_delta_spills": self.n_delta_spills,
-            "spill_bytes": self.bytes_spilled,
-            "spill_bytes_full_equiv": self.bytes_full_equiv,
-            "spill_bytes_compressed": self.bytes_compressed,
-            "n_store_evictions": self.n_evictions,
-            "spill_store_entries": len(self._by_rid),
-            "spill_store_bytes": self.stored_bytes,
+            "n_delta_spills": 0,
+            "spill_bytes": 0,
+            "spill_bytes_full_equiv": 0,
+            "spill_bytes_compressed": 0,
+            "n_store_evictions": 0,
+            "spill_store_entries": 0,
+            "spill_store_bytes": 0,
         }
+
+    def stats(self) -> dict:
+        out = self.empty_stats()
+        out.update(
+            n_delta_spills=self.n_delta_spills,
+            spill_bytes=self.bytes_spilled,
+            spill_bytes_full_equiv=self.bytes_full_equiv,
+            spill_bytes_compressed=self.bytes_compressed,
+            n_store_evictions=self.n_evictions,
+            spill_store_entries=len(self._by_rid),
+            spill_store_bytes=self.stored_bytes,
+        )
+        return out

@@ -161,22 +161,30 @@ class PreemptiveScheduler:
             mode = "spill"       # contiguous rows have no resident identity:
             #                      the slot may be regrafted while swapped
         st0 = slots.states[slot]
-        assert st0 is not None, f"slot {slot} empty"
+        if st0 is None:
+            raise RuntimeError(f"preempt of empty slot {slot}")
         kv = None
         if mode == "spill":
+            shared = getattr(st0, "shared_pages", 0)
             if not hasattr(slots, "allocator"):
                 kv = slots.snapshot(slot)          # contiguous: full row
-            elif st0.pages:
+            elif len(st0.pages) > shared:
+                # shared-prefix pages stay pinned in the pool (the swap
+                # entry keeps its refs), so only the private tail is
+                # spilled — store records live in PRIVATE page
+                # coordinates (page 0 of a record == first page past
+                # the shared prefix)
                 if self.store is not None:
                     # the store's record IS the host copy — the swap
                     # entry carries no duplicate snapshot, so the
                     # codec/caps really bound host spill memory
-                    synced = st0.synced_pages
+                    synced = max(st0.synced_pages, shared)
                     delta = slots.snapshot(slot, since=synced)
-                    self.store.merge(st0.request.rid, delta, synced,
-                                     len(st0.pages))
+                    self.store.merge(st0.request.rid, delta,
+                                     synced - shared,
+                                     len(st0.pages) - shared)
                 else:
-                    kv = slots.snapshot(slot)
+                    kv = slots.snapshot(slot, since=shared)
             # else: PREFILLING with no chunk landed yet — nothing to
             # snapshot; the re-placed state redoes its chunks on resume
         st = slots.detach(slot, release_pages=mode == "spill")
@@ -207,6 +215,9 @@ class PreemptiveScheduler:
             e = self.swapped.get(rid)
             if e is not None and e.spilled:
                 del self.swapped[rid]
+                # drop any shared-prefix refs the swap entry pinned —
+                # the redo re-attaches them through the index
+                self.engine.slots.discard_detached(e.state)
                 self.engine.queue.requeue_front(e.state.request)
                 self.n_redo_from_prefill += 1
                 continue
@@ -217,7 +228,9 @@ class PreemptiveScheduler:
                   next((s for s in self.engine.slots.states
                         if s is not None and s.request.rid == rid), None))
             if st is not None:
-                st.synced_pages = 0
+                # shared-prefix pages never ship, so the watermark
+                # floors at the shared boundary, not 0
+                st.synced_pages = getattr(st, "shared_pages", 0)
 
     def resume(self, rid: int, slot: int) -> None:
         """Re-place a swapped sequence into a free slot, token-exactly."""
@@ -258,10 +271,14 @@ class PreemptiveScheduler:
         if need <= 0:
             return self.held_pages
         while alloc.available() < need and slots.any_active():
+            # spilling a victim only returns its PRIVATE pages (shared
+            # prefix refs stay pinned), so rank by reclaimable pages
             victims = sorted(
                 slots.active_slots(),
                 key=lambda s: (slots.states[s].request.priority,
-                               -len(slots.states[s].pages),
+                               -(len(slots.states[s].pages)
+                                 - getattr(slots.states[s], "shared_pages",
+                                           0)),
                                -slots.states[s].request.arrival_t,
                                slots.states[s].request.rid))
             self.preempt(victims[0], "spill")
@@ -424,10 +441,7 @@ class PreemptiveScheduler:
     def stats(self) -> dict:
         lat = self.resume_s
         delta = (self.store.stats() if self.store is not None else
-                 {"n_delta_spills": 0, "spill_bytes": 0,
-                  "spill_bytes_full_equiv": 0, "spill_bytes_compressed": 0,
-                  "n_store_evictions": 0, "spill_store_entries": 0,
-                  "spill_store_bytes": 0})
+                 DeltaSpillStore.empty_stats())
         return {
             "n_preemptions": self.n_preemptions,
             "n_spills": self.n_spills,
@@ -596,9 +610,12 @@ class SpaceGroundScheduler:
                     if esc:
                         rep.escalated.append(rid)
                         src = by_rid[rid]
-                        g = Request(prompt=src.prompt.copy(),
-                                    max_new=src.max_new,
-                                    priority=src.priority)
+                        # clone keeps priority/prompt/max_new; arrival
+                        # is the downlink tick the answer landed on the
+                        # ground, so ground-tier admission order matches
+                        # downlink order (not a flat 0.0 for everyone)
+                        g = src.clone()
+                        g.arrival_t = float(self.ground.clock)
                         ground_to_rid[g.rid] = rid
                         self.ground.submit(g)
                 if tx_active:

@@ -1,0 +1,273 @@
+"""Prefix-sharing copy-on-write paged KV: the radix index, refcounted
+attach, CoW forking, spill/resume pinning, and end-to-end token
+exactness with the unshared engine."""
+import jax
+import numpy as np
+import pytest
+
+from repro.models import transformer as T
+from repro.serving.batching import Request
+from repro.serving.engine import ContinuousEngine
+from repro.serving.paging import BlockAllocator, PagePrefixIndex, PoolExhausted
+from repro.serving.scheduler import PreemptiveScheduler
+
+from helpers import f32_cfg
+
+PS = 16
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return f32_cfg("smollm-360m")
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return T.init_params(jax.random.PRNGKey(0), cfg, max_seq=128)
+
+
+def _engine(cfg, params, *, prefix_cache, **kw):
+    kw.setdefault("n_slots", 4)
+    kw.setdefault("max_seq", 128)
+    return ContinuousEngine(cfg, params, kv_layout="paged", page_size=PS,
+                            prefix_cache=prefix_cache, **kw)
+
+
+def _shared_trace(cfg, *, n=8, header_pages=2, seed=3):
+    """n requests over ONE header of ``header_pages`` full pages, each
+    with a unique tail; the last request repeats request 0's full
+    prompt (a fully-covered admission)."""
+    rng = np.random.default_rng(seed)
+    header = rng.integers(1, cfg.vocab_size, header_pages * PS).astype(
+        np.int32)
+    out = []
+    for i in range(n - 1):
+        tail = rng.integers(1, cfg.vocab_size, 3 + i).astype(np.int32)
+        out.append(Request(prompt=np.concatenate([header, tail]),
+                           max_new=4, arrival_t=float(2 * i)))
+    out.append(Request(prompt=out[0].prompt.copy(), max_new=3,
+                       arrival_t=float(2 * n)))
+    return out
+
+
+def _drained(eng):
+    a = eng.slots.allocator
+    if eng.slots.prefix_index is not None:
+        eng.slots.prefix_index.clear()
+    return (a.in_use == 0 and a.reserved == 0 and a.n_live_refs() == 0
+            and len(a._free) == a.n_pages)
+
+
+# ---------------------------------------------------------------------------
+# the radix index in isolation
+# ---------------------------------------------------------------------------
+
+def test_prefix_index_match_attach_evict_refcounts():
+    a = BlockAllocator(8)
+    idx = PagePrefixIndex(a, 4)
+    toks = np.arange(1, 13, dtype=np.int32)       # 3 full pages
+    a.reserve(3)
+    pages = a.alloc(3)
+    idx.insert(toks, pages)
+    assert all(a.refcount(p) == 2 for p in pages)  # caller + index
+    a.release(pages)                               # caller finishes
+    assert all(a.refcount(p) == 1 for p in pages)  # index keeps them live
+    assert a.in_use == 3 and idx.reclaimable() == 3
+
+    hit = idx.match(toks)
+    assert list(hit) == list(pages)
+    assert idx.match(toks[:7]) == pages[:1]        # page-granular: 1 full page
+    assert idx.match(np.flip(toks).copy()) == []
+    for got in (3, 1, 0):                          # admission accounting
+        idx.note_attach(got)
+    assert idx.hits == 2 and idx.misses == 1 and idx.pages_attached == 4
+
+    # eviction is leaf-first and returns pages to the pool
+    freed = idx.evict(1)
+    assert freed == 1 and a.in_use == 2
+    assert idx.match(toks) == pages[:2]            # prefix survives
+    idx.clear()
+    assert a.in_use == 0 and a.n_live_refs() == 0
+
+
+def test_prefix_index_shared_interior_survives_leaf_eviction():
+    a = BlockAllocator(8)
+    idx = PagePrefixIndex(a, 4)
+    head = np.arange(1, 5, dtype=np.int32)
+    for salt in (50, 60):                          # two branches, one head
+        toks = np.concatenate([head, np.arange(salt, salt + 4,
+                                               dtype=np.int32)])
+        a.reserve(2)
+        idx.insert(toks, a.alloc(2))
+    # first-writer-wins: the second branch's duplicate head copy was
+    # never indexed, so once both callers finish it frees outright —
+    # leaving head + two tails (all rc==1, held only by the index).
+    # The head is INTERIOR: evicting 1 page must take a LEAF.
+    for p in range(1, 5):
+        a.release([p])                             # callers all finished
+    assert a.in_use == 3 and idx.reclaimable() == 3
+    idx.evict(1)
+    assert len(idx.match(np.concatenate(
+        [head, np.arange(50, 54, dtype=np.int32)]))) + len(idx.match(
+            np.concatenate([head, np.arange(60, 64,
+                                            dtype=np.int32)]))) == 3
+    idx.clear()
+    assert a.in_use == 0
+
+
+def test_share_of_free_page_raises():
+    a = BlockAllocator(4)
+    with pytest.raises(PoolExhausted):
+        a.share([1])
+    a.reserve(1)
+    pages = a.alloc(1)
+    a.share(pages)
+    a.release(pages)
+    assert a.refcount(pages[0]) == 1 and a.in_use == 1
+    a.release(pages)
+    assert a.in_use == 0
+    with pytest.raises(PoolExhausted):
+        a.release(pages)                           # refcount 0 is final
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: shared serving is token-exact and does less work
+# ---------------------------------------------------------------------------
+
+def test_shared_replay_token_exact_and_cheaper(cfg, params):
+    trace = _shared_trace(cfg)
+    runs = {}
+    for pc in (True, False):
+        eng = _engine(cfg, params, prefix_cache=pc)
+        res = eng.run([r.clone() for r in trace])
+        toks = [res[k].tokens for k in sorted(res)]
+        runs[pc] = (eng, toks)
+    eng_s, toks_s = runs[True]
+    eng_u, toks_u = runs[False]
+    assert len(toks_s) == len(toks_u)
+    for a, b in zip(toks_s, toks_u):
+        np.testing.assert_array_equal(a, b)
+    # sharing skipped real prompt work and real pages
+    assert eng_s.prefill_tokens_total < eng_u.prefill_tokens_total
+    assert (eng_s.slots.allocator.peak_in_use
+            < eng_u.slots.allocator.peak_in_use)
+    stats = eng_s.kv_cache_stats()
+    assert stats["prefix_hits"] > 0
+    assert stats["prefill_positions_skipped"] > 0
+    assert _drained(eng_s) and _drained(eng_u)
+
+
+def test_fully_covered_prompt_pays_one_position(cfg, params):
+    """A duplicate prompt re-runs ONLY its final position (for the
+    first token's logits) — and CoW-forks the page it rewrites."""
+    rng = np.random.default_rng(9)
+    prompt = rng.integers(1, cfg.vocab_size, 2 * PS).astype(np.int32)
+    first = Request(prompt=prompt.copy(), max_new=4, arrival_t=0.0)
+    dup = Request(prompt=prompt.copy(), max_new=4, arrival_t=50.0)
+    eng = _engine(cfg, params, prefix_cache=True)
+    res = eng.run([first, dup])
+    assert eng.slots.cow_copies >= 1               # last shared page forked
+    # full prompt charged once, the duplicate charged 1 position
+    assert eng.prefill_tokens_total == len(prompt) + 1
+    toks = [res[k].tokens for k in sorted(res)]
+    np.testing.assert_array_equal(toks[0][:4], toks[1][:4])
+    assert _drained(eng)
+
+
+def test_cow_fork_never_corrupts_the_cached_prefix(cfg, params):
+    """Serve header+A, then header+B, then header+A again: if the CoW
+    fork failed to copy (or wrote through a shared page), the third
+    run would decode from corrupted header KV."""
+    rng = np.random.default_rng(21)
+    header = rng.integers(1, cfg.vocab_size, 2 * PS).astype(np.int32)
+    tails = [rng.integers(1, cfg.vocab_size, 5).astype(np.int32)
+             for _ in range(2)]
+    mk = lambda t, at: Request(prompt=np.concatenate([header, t]),
+                               max_new=6, arrival_t=at)
+    trace = [mk(tails[0], 0.0), mk(tails[1], 20.0), mk(tails[0], 40.0)]
+    eng = _engine(cfg, params, prefix_cache=True, n_slots=1)
+    res = eng.run([r.clone() for r in trace])
+    ref = _engine(cfg, params, prefix_cache=False, n_slots=1).run(
+        [r.clone() for r in trace])
+    for a, b in _pairs(res, ref):
+        np.testing.assert_array_equal(a, b)
+    assert _drained(eng)
+
+
+def _pairs(res_a, res_b):
+    return [(res_a[a].tokens, res_b[b].tokens)
+            for a, b in zip(sorted(res_a), sorted(res_b))]
+
+
+# ---------------------------------------------------------------------------
+# sharing x preemption: spills ship private pages only, resume re-pins
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("delta_spill", [False, True])
+def test_spill_resume_with_shared_prefixes_token_exact(cfg, params,
+                                                       delta_spill):
+    trace = _shared_trace(cfg, n=6)
+    ref = _engine(cfg, params, prefix_cache=False).run(
+        [r.clone() for r in trace])
+
+    eng = _engine(cfg, params, prefix_cache=True, n_slots=2)
+    sched = PreemptiveScheduler(eng, preempt_mode="spill",
+                                delta_spill=delta_spill)
+    for r in sorted(trace, key=lambda r: r.arrival_t):
+        sched.submit(r.clone())
+    tick = 0
+    spilled_private = []
+    while sched.has_work():
+        tick += 1
+        assert tick < 2000
+        if tick % 7 == 0:
+            for slot in list(eng.slots.active_slots()):
+                st = eng.slots.states[slot]
+                shared_before = st.shared_pages
+                n_pages = len(st.pages)
+                sched.preempt(slot, "spill")
+                # the swap entry retains EXACTLY the shared prefix
+                entry = sched.swapped[st.request.rid]
+                assert len(entry.state.pages) == shared_before
+                spilled_private.append(n_pages - shared_before)
+        sched.step()
+    assert sched.n_preemptions > 0 and any(n > 0 for n in spilled_private)
+    for a, b in _pairs(eng.results, ref):
+        np.testing.assert_array_equal(a, b)
+    assert sched.n_resumes == sched.n_preemptions
+    assert _drained(eng)
+
+
+def test_store_eviction_redo_releases_pinned_prefix(cfg, params):
+    """A spill-store eviction while the sequence is swapped out must
+    drop the swap entry's pinned shared refs (discard_detached), and
+    the redo must still finish token-exactly."""
+    trace = _shared_trace(cfg, n=5)
+    ref = _engine(cfg, params, prefix_cache=False).run(
+        [r.clone() for r in trace])
+    eng = _engine(cfg, params, prefix_cache=True, n_slots=2)
+    sched = PreemptiveScheduler(eng, preempt_mode="spill", delta_spill=True,
+                                spill_max_entries=1)
+    for r in sorted(trace, key=lambda r: r.arrival_t):
+        sched.submit(r.clone())
+    tick = 0
+    while sched.has_work():
+        tick += 1
+        assert tick < 3000
+        if tick % 5 == 0:
+            for slot in list(eng.slots.active_slots()):
+                sched.preempt(slot, "spill")
+        sched.step()
+    for a, b in _pairs(eng.results, ref):
+        np.testing.assert_array_equal(a, b)
+    assert _drained(eng)
+
+
+# ---------------------------------------------------------------------------
+# config guards
+# ---------------------------------------------------------------------------
+
+def test_prefix_cache_requires_paged_layout(cfg, params):
+    with pytest.raises(ValueError):
+        ContinuousEngine(cfg, params, kv_layout="contiguous",
+                         prefix_cache=True)

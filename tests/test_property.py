@@ -221,6 +221,87 @@ def test_allocator_accounting_exact_under_random_ops(n_pages, op_seeds):
 
 
 # ---------------------------------------------------------------------------
+# block allocator: refcounted sharing against an exact mirror model
+# ---------------------------------------------------------------------------
+
+@given(st.integers(4, 24), st.lists(st.integers(0, 2 ** 31 - 1),
+                                    min_size=1, max_size=50))
+@settings(**SETTINGS)
+def test_allocator_refcount_sharing_exact_under_random_ops(n_pages, op_seeds):
+    """Random share/fork/spill/resume/finish interleavings against a
+    mirror refcount model: a page is live iff some table references it,
+    in_use counts DISTINCT live pages, n_live_refs counts references,
+    no interleaving leaks a page or frees one twice, and every page
+    hits refcount zero exactly once (the release after that raises)."""
+    from repro.serving.paging import BlockAllocator, PoolExhausted
+    a = BlockAllocator(n_pages)
+    rc = {}                            # mirror: page id -> reference count
+    tables = []                        # (pages, outstanding_reservation)
+
+    def deref(pages):
+        for i in pages:
+            rc[i] -= 1
+            if not rc[i]:
+                del rc[i]
+
+    for seed in op_seeds:
+        rng = np.random.default_rng(seed)
+        op = rng.integers(0, 5)
+        if op == 0 and a.available() > 0:          # admit: reserve + alloc
+            budget = int(rng.integers(1, a.available() + 1))
+            a.reserve(budget)
+            first = int(rng.integers(1, budget + 1))
+            pages = a.alloc(first)
+            rc.update((i, 1) for i in pages)       # fresh pages: one ref
+            tables.append((pages, budget - first))
+        elif op == 1 and tables:                   # fork: share a prefix
+            src = tables[int(rng.integers(len(tables)))][0]
+            if src:
+                shared = list(src[:int(rng.integers(1, len(src) + 1))])
+                a.share(shared)
+                for i in shared:
+                    rc[i] += 1
+                tables.append((shared, 0))
+        elif op == 2 and tables:                   # grow/resume one page
+            i = int(rng.integers(len(tables)))
+            pages, rest = tables[i]
+            if rest > 0:
+                new = a.alloc(1)
+                rc[new[0]] = 1
+                pages.extend(new)
+                tables[i] = (pages, rest - 1)
+        elif op == 3 and tables:                   # spill: drop a suffix
+            i = int(rng.integers(len(tables)))
+            pages, rest = tables[i]
+            if pages:
+                cut = int(rng.integers(len(pages)))
+                a.release(pages[cut:])
+                deref(pages[cut:])
+                tables[i] = (pages[:cut], rest)
+        elif op == 4 and tables:                   # finish: release all
+            pages, rest = tables.pop(int(rng.integers(len(tables))))
+            a.release(pages, unreserve=rest)
+            deref(pages)
+        # the mirror must agree exactly after every op
+        assert a.in_use == len(rc)
+        assert a.n_live_refs() == sum(rc.values())
+        assert all(a.refcount(i) == n for i, n in rc.items())
+        assert a.reserved == sum(r for _, r in tables)
+        assert len(a._free) == n_pages - a.in_use
+        assert a._free_set == set(a._free)
+        assert a.available() == n_pages - a.in_use - a.reserved
+    for pages, rest in tables:                     # drain everything
+        a.release(pages, unreserve=rest)
+        deref(pages)
+    assert not rc and a.in_use == 0 and a.reserved == 0
+    assert a.n_live_refs() == 0 and a.available() == n_pages
+    with pytest.raises(PoolExhausted):             # refcount 0 is final:
+        a.release([1])                             # no second free...
+    with pytest.raises(PoolExhausted):
+        a.share([1])                               # ...and no revival
+
+
+# ---------------------------------------------------------------------------
 # preemptive scheduler: invariants under random arrival/preempt/resume traces
 # ---------------------------------------------------------------------------
 

@@ -811,3 +811,49 @@ def test_space_ground_tiansuan_pair_end_to_end():
         assert rid in rep.ground_results
     _assert_drained(sat)
     _assert_drained(gnd)
+
+
+def test_escalated_requests_carry_downlink_arrival(cfg, params):
+    """classify() used to hand-build the escalated ground Request and
+    silently drop arrival provenance (every escalation arrived at
+    t=0.0).  The escalated clone must reach the ground tier stamped
+    with its downlink tick — nondecreasing across escalations, so
+    ground admission order provably matches downlink order — with the
+    source request's priority preserved."""
+    trace = [r.clone() for r in _sg_trace(cfg)]
+    for i, r in enumerate(trace):
+        r.priority = i % 2                        # mixed priorities
+    sg = _sg_setup(cfg, params, threshold=2.0)    # always escalate
+    seen = []                                     # (arrival_t, priority)
+    orig = sg.ground.submit
+    def spy(req):
+        seen.append((req.arrival_t, req.priority))
+        return orig(req)
+    sg.ground.submit = spy
+    rep = sg.run(trace)
+    assert len(seen) == len(trace)                # everything escalated
+    arrivals = [a for a, _ in seen]
+    assert arrivals == sorted(arrivals)           # downlink order kept
+    assert any(a > 0.0 for a in arrivals)         # provenance not erased
+    # the i-th ground submission is the i-th downlinked escalation
+    prio = {r.rid: r.priority for r in trace}
+    assert [p for _, p in seen] == [prio[rid] for rid in rep.escalated]
+    _assert_drained(sg.sat.engine)
+    _assert_drained(sg.ground)
+
+
+def test_stats_schema_matches_store_with_and_without_spill(cfg, params):
+    """The no-store stats dict is derived from DeltaSpillStore's own
+    schema (empty_stats), so the two paths can never drift apart — any
+    new store key appears in BOTH or the store's own stats() breaks."""
+    from repro.serving.paging import DeltaSpillStore
+
+    eng_d = ContinuousEngine(cfg, params, n_slots=2, max_seq=64)
+    with_store = PreemptiveScheduler(eng_d, delta_spill=True).stats()
+    eng_n = ContinuousEngine(cfg, params, n_slots=2, max_seq=64)
+    no_store = PreemptiveScheduler(eng_n, delta_spill=False).stats()
+    assert set(with_store) == set(no_store)
+    assert set(DeltaSpillStore.empty_stats()) <= set(no_store)
+    # the empty schema IS the live schema, key for key
+    assert set(DeltaSpillStore.empty_stats()) == set(
+        DeltaSpillStore(8).stats())
