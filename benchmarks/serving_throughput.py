@@ -65,6 +65,22 @@ is token-exact with the unshared run, its peak KV pool bytes AND its
 total prefill tokens are STRICTLY below the unshared run's, and the
 pool/refcounts fully drain once the prefix index is cleared.
 
+The FAULT replay (``fault_replay``) reruns a contended space-ground
+trace under an adversarial ``core.faults.FaultPlan`` — per-frame
+downlink loss AND bit-flip corruption, early-LOS window truncation,
+periodic spill-record corruption, and one scheduled satellite crash
+mid-run — against the fault-free replay of the same trace.  CI gates
+(GATE_VERSION 5): every final token stream is IDENTICAL to the
+fault-free run's (faults cost time and bytes, never answers); every
+injected corruption is detected (``n_corruptions_detected ==
+n_corruptions_injected``, zero silent acceptances); retransmitted and
+lost bytes are metered in the ledger; the framed lane's byte ledger
+conserves (attempted == delivered + lost + corrupt); goodput efficiency
+is bounded below by the injected loss; the crash is survived via
+checkpoint/restore (``n_reboots == 1``) with pools and spill store
+drained after.  ``--chaos SEED...`` sweeps FaultPlan seeds and asserts
+the same invariants per seed (the CI chaos step).
+
 The gates live in ``scripts/check_bench.py`` (run it locally after the
 benchmark: ``python scripts/check_bench.py BENCH_serving.json``).
 
@@ -89,7 +105,7 @@ CW_PERIOD = 40              # decode ticks between window opens
 CW_DURATION = 8             # ticks per window (gap > max max_new so the
                             # restart baseline cannot livelock)
 CW_MAX_STEPS = 20_000       # replay safety valve
-BENCH_VERSION = 4           # bumped when gated keys change (check_bench)
+BENCH_VERSION = 5           # bumped when gated keys change (check_bench)
 
 # overlap replay: denser passes (so long sequences straddle several and
 # re-preemption exercises the KV-delta format) + a staging reserve that
@@ -129,6 +145,28 @@ SP_TAIL_LENS = (2, 8)       # per-request unique suffix length
 SP_MAX_NEW = (2, 8)
 SP_RATE = 0.6               # arrivals per decode step
 SP_POOL_PAGES = 48
+
+# fault replay: a contended satellite engine (small pool, big staging
+# reserve — spills are constant, so spill corruption has records to
+# hit) under a dense pass schedule, with every fault class armed at
+# once.  Rates are high enough that a short replay still draws several
+# losses AND corruptions from the seeded stream; frames are small so
+# even compact result payloads span frames.
+FR_N_REQUESTS = 8
+FR_SEED = 0                 # FaultPlan seed for the gated section
+FR_FRAME_LOSS = 0.25        # per-frame transmit erasure probability
+FR_FRAME_CORRUPT = 0.2      # per-frame bit-flip probability
+FR_TRUNCATE_EVERY = 3       # every 3rd pass ends early (LOS)
+FR_SPILL_CORRUPT_EVERY = 2  # every 2nd spill-store merge lands corrupted
+FR_CRASH_AT_TICK = 25       # scheduled onboard reboot
+FR_FRAME_BYTES = 32         # downlink ARQ frame size
+FR_MAX_RETRIES = 6          # per-frame retry budget
+FR_CHECKPOINT_EVERY = 8     # onboard ticks between checkpoints
+FR_SAT_SLOTS = 2
+FR_SAT_POOL_PAGES = 9
+FR_SAT_PAGE_SIZE = 8
+FR_RESERVE_PAGES = 4
+FR_GATE_THRESHOLD = 0.6     # mixed escalation (raw + compact payloads)
 
 
 def _make_engine_inputs():
@@ -565,6 +603,167 @@ def _shared_prefix_report(cfg, params):
     }
 
 
+def _fault_trace(cfg):
+    from repro.serving.batching import Request
+
+    rng = np.random.default_rng(3)
+    return [Request(
+        prompt=rng.integers(1, cfg.vocab_size,
+                            int(rng.integers(8, 14))).astype(np.int32),
+        max_new=int(rng.integers(10, 18)), arrival_t=float(i * 2))
+        for i in range(FR_N_REQUESTS)]
+
+
+def _serve_fault(cfg, params, trace, *, plan_seed=None):
+    """One space-ground replay; ``plan_seed=None`` is the fault-free
+    comparator (same engines/schedule/gate, no injector, unframed
+    lane).  Returns (summary dict, final tokens by submission order)."""
+    from repro.core.faults import FaultInjector, FaultPlan
+    from repro.core.gating import ConfidenceGate
+    from repro.core.link import ContactSchedule
+    from repro.serving.engine import ContinuousEngine
+    from repro.serving.scheduler import SpaceGroundScheduler
+
+    sat = ContinuousEngine(cfg, params, n_slots=FR_SAT_SLOTS,
+                           max_seq=MAX_SEQ, kv_layout="paged",
+                           page_size=FR_SAT_PAGE_SIZE,
+                           pool_pages=FR_SAT_POOL_PAGES,
+                           prefill_budget_tokens=8)
+    gnd = ContinuousEngine(cfg, params, n_slots=FR_SAT_SLOTS,
+                           max_seq=MAX_SEQ)
+    kw = dict(schedule=ContactSchedule(contact_duration_s=4.0,
+                                       contacts_per_day=8640, seed=3),
+              gate=ConfidenceGate("max_prob", FR_GATE_THRESHOLD),
+              s_per_step=1.0, horizon_s=7200.0,
+              comm_reserve_pages=FR_RESERVE_PAGES)
+    inj = None
+    if plan_seed is not None:
+        inj = FaultInjector(FaultPlan(
+            seed=plan_seed, frame_loss_rate=FR_FRAME_LOSS,
+            frame_corrupt_rate=FR_FRAME_CORRUPT,
+            truncate_every=FR_TRUNCATE_EVERY,
+            spill_corrupt_every=FR_SPILL_CORRUPT_EVERY,
+            crash_at_tick=FR_CRASH_AT_TICK))
+        kw.update(faults=inj, frame_bytes=FR_FRAME_BYTES,
+                  link_max_retries=FR_MAX_RETRIES,
+                  checkpoint_every=FR_CHECKPOINT_EVERY)
+    sg = SpaceGroundScheduler(sat, gnd, **kw)
+    t0 = time.perf_counter()
+    rep = sg.run([r.clone() for r in trace])
+    wall = time.perf_counter() - t0
+    tokens = [rep.tokens[k] for k in sorted(rep.tokens)]
+    sat_tokens = [rep.sat_results[k].tokens for k in sorted(rep.sat_results)]
+    alloc = sg.sat.engine.slots.allocator
+    ls = rep.lane_stats
+    store_stats = (sg.sat.store.stats() if sg.sat.store is not None
+                   else {})
+    out = {
+        "wall_s": round(wall, 4),
+        "clock_steps": sg.sat.clock,
+        "n_answers": len(tokens),
+        "n_escalated": len(rep.escalated),
+        "n_undelivered": len(rep.undelivered),
+        "n_reboots": rep.n_reboots,
+        "n_redo_from_corruption": rep.sat_stats["n_redo_from_corruption"],
+        "pool_drained": (alloc.in_use == 0 and alloc.reserved == 0
+                         and alloc.n_live_refs() == 0),
+        "spill_store_empty": (sg.sat.store is None
+                              or len(sg.sat.store) == 0),
+        "lane": ls,
+        "ledger": {k: round(v, 4) for k, v in
+                   rep.ledger.counters.items()},
+    }
+    if inj is not None:
+        attempted = max(ls["frame_bytes_attempted"], 1e-9)
+        out["injected"] = {
+            "n_frames_lost": inj.n_frames_lost,
+            "n_frame_corruptions": inj.n_frame_corruptions,
+            "n_spill_corruptions": inj.n_spill_corruptions,
+            "n_corruptions_injected": inj.n_corruptions_injected,
+            "n_windows_truncated": inj.n_windows_truncated,
+            "n_crashes": inj.n_crashes,
+        }
+        out["n_corruptions_detected"] = (
+            ls["n_corruptions_detected"]
+            + store_stats.get("n_spill_corruptions_detected", 0))
+        out["frame_ledger_conserved"] = bool(
+            abs(ls["frame_bytes_attempted"]
+                - (ls["bytes_sent"] + ls["bytes_lost"]
+                   + ls["bytes_corrupt"])) < 1e-6)
+        out["goodput_efficiency"] = round(ls["bytes_sent"] / attempted, 4)
+    return out, tokens, sat_tokens
+
+
+def _fault_replay_report(cfg, params, *, plan_seed=FR_SEED):
+    """Fault-free vs all-faults-armed replay of the same trace: the
+    fault plan must cost bytes and time, never answers."""
+    trace = _fault_trace(cfg)
+    ref, ref_tokens, ref_sat = _serve_fault(cfg, params, trace)
+    flt, flt_tokens, flt_sat = _serve_fault(cfg, params, trace,
+                                            plan_seed=plan_seed)
+    exact = lambda a, b: (len(a) == len(b)
+                          and all(np.array_equal(x, y)
+                                  for x, y in zip(a, b)))
+    return {
+        "plan": {"seed": plan_seed, "frame_loss_rate": FR_FRAME_LOSS,
+                 "frame_corrupt_rate": FR_FRAME_CORRUPT,
+                 "truncate_every": FR_TRUNCATE_EVERY,
+                 "spill_corrupt_every": FR_SPILL_CORRUPT_EVERY,
+                 "crash_at_tick": FR_CRASH_AT_TICK,
+                 "frame_bytes": FR_FRAME_BYTES,
+                 "max_retries": FR_MAX_RETRIES,
+                 "checkpoint_every": FR_CHECKPOINT_EVERY},
+        "fault_free": ref,
+        "faulted": flt,
+        "token_exact_vs_fault_free": exact(flt_tokens, ref_tokens),
+        "sat_token_exact_vs_fault_free": exact(flt_sat, ref_sat),
+    }
+
+
+def run_chaos(seeds):
+    """The CI chaos sweep: replay the fault section under several
+    FaultPlan seeds, holding the full invariant set for each."""
+    import jax
+    from repro.models import transformer as T
+
+    cfg, _ = _make_engine_inputs()
+    params = T.init_params(jax.random.PRNGKey(0), cfg, max_seq=MAX_SEQ)
+    trace = _fault_trace(cfg)
+    _, ref_tokens, ref_sat = _serve_fault(cfg, params, trace)
+    failures = []
+    for seed in seeds:
+        flt, toks, sat_toks = _serve_fault(cfg, params, trace,
+                                           plan_seed=seed)
+        inj = flt["injected"]
+        checks = {
+            "token_exact": (len(toks) == len(ref_tokens) and all(
+                np.array_equal(a, b) for a, b in zip(toks, ref_tokens))),
+            "sat_token_exact": (len(sat_toks) == len(ref_sat) and all(
+                np.array_equal(a, b)
+                for a, b in zip(sat_toks, ref_sat))),
+            "all_detected": (flt["n_corruptions_detected"]
+                             == inj["n_corruptions_injected"]),
+            "no_silent": flt["lane"]["n_silent_corruptions"] == 0,
+            "conserved": flt["frame_ledger_conserved"],
+            "rebooted": flt["n_reboots"] == 1 == inj["n_crashes"],
+            "drained": flt["pool_drained"] and flt["spill_store_empty"],
+            "all_delivered": flt["n_undelivered"] == 0,
+        }
+        bad = [k for k, ok in checks.items() if not ok]
+        status = "ok" if not bad else f"FAIL({','.join(bad)})"
+        print(f"chaos seed={seed}: {status} "
+              f"injected={inj['n_corruptions_injected']} "
+              f"detected={flt['n_corruptions_detected']} "
+              f"lost={inj['n_frames_lost']} "
+              f"retx={flt['lane']['n_retransmits']} "
+              f"reboots={flt['n_reboots']} "
+              f"redo={flt['n_redo_from_corruption']} "
+              f"eff={flt['goodput_efficiency']}")
+        if bad:
+            failures.append((seed, bad))
+    return failures
+
+
 def run():
     import jax
     from repro.models import transformer as T
@@ -615,6 +814,7 @@ def run():
     out["contact_window"] = cw
     out["chunked_prefill"] = _chunked_prefill_report(cfg, params)
     out["shared_prefix"] = _shared_prefix_report(cfg, params)
+    out["fault_replay"] = _fault_replay_report(cfg, params)
     out["bench_version"] = BENCH_VERSION
     rows.append(("serving_contact_window_preemptive",
                  cw["preemptive"]["wall_s"] * 1e6
@@ -640,6 +840,18 @@ def run():
                       cp["monolithic"]["tick_latency_p99_s"] * 1e6, 1),
                   "token_exact": cp["token_exact"],
                   "ttft_mean_steps": cp["chunked"]["ttft_mean_steps"]}))
+    fr = out["fault_replay"]
+    rows.append(("serving_fault_replay",
+                 fr["faulted"]["wall_s"] * 1e6
+                 / max(fr["faulted"]["n_answers"], 1),
+                 {"token_exact": fr["token_exact_vs_fault_free"],
+                  "n_corruptions_detected":
+                  fr["faulted"]["n_corruptions_detected"],
+                  "n_corruptions_injected":
+                  fr["faulted"]["injected"]["n_corruptions_injected"],
+                  "n_reboots": fr["faulted"]["n_reboots"],
+                  "goodput_efficiency":
+                  fr["faulted"]["goodput_efficiency"]}))
     sp = out["shared_prefix"]
     rows.append(("serving_shared_prefix",
                  sp["shared"]["wall_s"] * 1e6
@@ -657,5 +869,15 @@ def run():
 
 
 if __name__ == "__main__":
+    import sys
+
+    if len(sys.argv) > 1 and sys.argv[1] == "--chaos":
+        seeds = [int(s) for s in sys.argv[2:]] or [0, 1, 2, 3, 4]
+        failures = run_chaos(seeds)
+        if failures:
+            print(f"chaos sweep FAILED: {failures}")
+            sys.exit(1)
+        print(f"chaos sweep ok across seeds {seeds}")
+        sys.exit(0)
     for name, us, derived in run():
         print(f"{name},{us:.1f},{json.dumps(derived, sort_keys=True)}")

@@ -32,7 +32,15 @@ Gates:
     header-heavy trace: shared replay token-exact with the unshared
     one, peak KV pool bytes AND total prefill tokens STRICTLY below
     the unshared replay's, prefix hits really observed, and the pool
-    and refcounts fully drained once the index is cleared.
+    and refcounts fully drained once the index is cleared;
+  * fault_replay — the all-faults-armed replay (frame loss + bit-flip
+    corruption + early-LOS truncation + spill corruption + one
+    scheduled crash): final AND satellite tokens identical to the
+    fault-free run, every injected corruption detected with zero
+    silent acceptances, retransmitted/lost bytes metered, the framed
+    byte ledger conserved, goodput efficiency bounded below by the
+    injected loss, the crash survived exactly once via
+    checkpoint/restore, pools and spill store drained after.
 
 Each gate prints PASS/FAIL; the exit code is non-zero if any failed.
 """
@@ -41,7 +49,7 @@ from __future__ import annotations
 import json
 import sys
 
-GATE_VERSION = 4
+GATE_VERSION = 5
 
 
 class Gates:
@@ -190,6 +198,77 @@ def check_shared_prefix(g: Gates, sp: dict) -> None:
     g.check("unshared pool drained", un["pool_drained"] is True)
 
 
+def check_fault_replay(g: Gates, fr: dict) -> None:
+    flt, ref = fr["faulted"], fr["fault_free"]
+    inj = flt["injected"]
+    lane = flt["lane"]
+    led = flt["ledger"]
+    plan = fr["plan"]
+    # the tentpole: faults cost bytes and time, never answers — both
+    # the downlinked answers AND the raw satellite streams replay
+    # identically to the fault-free run
+    g.check("faulted replay token-exact vs fault-free",
+            fr["token_exact_vs_fault_free"] is True)
+    g.check("satellite streams token-exact vs fault-free",
+            fr["sat_token_exact_vs_fault_free"] is True)
+    # zero silent acceptance: every injected corruption (frame OR
+    # spill record) tripped a checksum somewhere — none slipped into
+    # an answer or a KV graft
+    g.check("corruptions injected", inj["n_corruptions_injected"] > 0,
+            f"n={inj['n_corruptions_injected']}")
+    g.check("every injected corruption detected",
+            flt["n_corruptions_detected"] == inj["n_corruptions_injected"],
+            f"{flt['n_corruptions_detected']} vs "
+            f"{inj['n_corruptions_injected']}")
+    g.check("no silent frame corruption",
+            lane["n_silent_corruptions"] == 0,
+            f"n={lane['n_silent_corruptions']}")
+    g.check("spill corruptions injected and redone from prefill",
+            inj["n_spill_corruptions"] > 0
+            and flt["n_redo_from_corruption"] > 0,
+            f"injected={inj['n_spill_corruptions']} "
+            f"redo={flt['n_redo_from_corruption']}")
+    # the ARQ path really ran and its cost is metered, both in lane
+    # counters and in the energy/byte ledger
+    g.check("frames lost and retransmits observed",
+            inj["n_frames_lost"] > 0 and lane["n_retransmits"] > 0,
+            f"lost={inj['n_frames_lost']} retx={lane['n_retransmits']}")
+    g.check("retransmitted bytes metered in ledger",
+            lane["bytes_retransmitted"] > 0
+            and led.get("bytes_retransmitted", 0) > 0,
+            f"lane={lane['bytes_retransmitted']} "
+            f"ledger={led.get('bytes_retransmitted', 0)}")
+    g.check("lost bytes metered in ledger",
+            led.get("bytes_lost", 0) > 0,
+            f"ledger={led.get('bytes_lost', 0)}")
+    g.check("frame byte ledger conserved",
+            flt["frame_ledger_conserved"] is True)
+    # goodput degrades by roughly the injected loss, not worse: the
+    # retry machinery isn't amplifying failures
+    floor = 1.0 - plan["frame_loss_rate"] - plan["frame_corrupt_rate"] - 0.2
+    g.check("goodput efficiency bounded below by injected loss",
+            floor <= flt["goodput_efficiency"] <= 1.0,
+            f"{flt['goodput_efficiency']} vs floor {round(floor, 3)}")
+    # crash-safety: the scheduled reboot happened exactly once and the
+    # restore left nothing behind
+    g.check("crash survived exactly once",
+            flt["n_reboots"] == 1 and inj["n_crashes"] == 1,
+            f"reboots={flt['n_reboots']} crashes={inj['n_crashes']}")
+    g.check("windows truncated by early LOS",
+            inj["n_windows_truncated"] > 0,
+            f"n={inj['n_windows_truncated']}")
+    g.check("every answer delivered despite faults",
+            flt["n_undelivered"] == 0 and flt["n_answers"] > 0,
+            f"undelivered={flt['n_undelivered']} "
+            f"answers={flt['n_answers']}")
+    g.check("faulted pool drained post-reboot",
+            flt["pool_drained"] is True)
+    g.check("faulted spill store empty", flt["spill_store_empty"] is True)
+    g.check("fault-free comparator clean",
+            ref["pool_drained"] is True and ref["n_reboots"] == 0
+            and ref["n_undelivered"] == 0)
+
+
 def main(argv) -> int:
     path = argv[1] if len(argv) > 1 else "BENCH_serving.json"
     with open(path) as f:
@@ -208,6 +287,7 @@ def main(argv) -> int:
     check_overlap(g, bench["contact_window"]["overlap"])
     check_chunked_prefill(g, bench["chunked_prefill"])
     check_shared_prefix(g, bench["shared_prefix"])
+    check_fault_replay(g, bench["fault_replay"])
     print(f"\n{'OK' if not g.failures else 'FAILED'}: "
           f"{g.failures} gate(s) failed ({path}, gate v{GATE_VERSION})")
     return 1 if g.failures else 0

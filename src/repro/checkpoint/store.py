@@ -74,6 +74,30 @@ def _decode_payload(rec: dict) -> bytes:
     raise ValueError(f"unknown checkpoint codec {codec!r}")
 
 
+def load_checkpoint_raw(path: str):
+    """Template-free load: ``({path_str: np.ndarray}, meta)``.
+
+    The crash-recovery checkpoint (``serving.scheduler``) stores a FLAT
+    dict keyed by string paths — per-sequence KV snapshots whose set of
+    keys depends on runtime serving state, so no static template pytree
+    can describe it.  bf16 leaves come back as ``ml_dtypes.bfloat16``
+    via jax, matching what ``save_checkpoint`` was handed."""
+    with open(path, "rb") as f:
+        obj = msgpack.unpackb(f.read(), raw=False)
+    out = {}
+    for key, rec in obj["leaves"].items():
+        raw = _decode_payload(rec)
+        shape = tuple(rec["shape"])
+        if rec["dtype"] == "bfloat16":
+            arr = np.asarray(jnp.asarray(
+                np.frombuffer(raw, np.uint16).reshape(shape)
+            ).view(jnp.bfloat16))
+        else:
+            arr = np.frombuffer(raw, np.dtype(rec["dtype"])).reshape(shape)
+        out[key] = arr
+    return out, obj["meta"]
+
+
 def load_checkpoint(path: str, template: Any):
     """Restore into the structure of ``template`` (a pytree of arrays or
     ShapeDtypeStructs).  Returns (tree, meta)."""

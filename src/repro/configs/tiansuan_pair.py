@@ -72,6 +72,14 @@ SCHEDULER = dict(
     delta_spill=True,                 # re-spills ship only dirtied pages
     prefill_budget_tokens=16,         # ContinuousEngine chunked-prefill
     #                                   budget: per-tick prompt tokens
+    # fault tolerance (core.faults / framed TransmitLane): the downlink
+    # is framed with per-frame CRC + NACK retransmission, and the
+    # onboard scheduler checkpoints its full serving state so a
+    # radiation-induced reboot resumes token-exactly from the last
+    # checkpoint instead of recomputing the day's backlog.
+    frame_bytes=1024,                 # downlink ARQ frame size
+    link_max_retries=8,               # per-frame retry budget
+    checkpoint_every=64,              # onboard ticks between checkpoints
 )
 
 CONFIG = GROUND            # default arch when loaded via get_config

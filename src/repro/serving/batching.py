@@ -26,6 +26,17 @@ import numpy as np
 _ids = itertools.count()
 
 
+def ensure_rid_floor(n: int) -> None:
+    """Advance the global rid counter to at least ``n``.  A checkpoint
+    restore rebuilds Requests with their ORIGINAL rids; without bumping
+    the counter past them, the next fresh Request (e.g. an escalation
+    ``clone``) could collide with a restored rid and cross-wire two
+    sequences' results."""
+    global _ids
+    nxt = next(_ids)
+    _ids = itertools.count(max(nxt, n))
+
+
 class QueueFull(RuntimeError):
     """Raised when a bounded RequestQueue rejects a submission."""
 
@@ -94,6 +105,11 @@ class RequestQueue:
     def arrived(self, now: float) -> List[Request]:
         """Queued requests whose arrival time has passed, FIFO order."""
         return [r for r in self._q if r.arrival_t <= now]
+
+    def items(self) -> List[Request]:
+        """The whole backlog in FIFO order (checkpoint serialization),
+        including requests whose arrival time has not passed yet."""
+        return list(self._q)
 
     def take(self, req: Request) -> Request:
         """Remove ``req`` (matched by identity: dataclass equality would

@@ -537,6 +537,16 @@ class PagedSlotManager(_SlotOccupancy):
             self._extract(self.cache,
                           jnp.asarray(st.pages[since:], jnp.int32)))
 
+    def snapshot_state(self, state: _PagedSlotState):
+        """Host-side copy of a DETACHED-but-resident sequence's pages
+        (a resident swap entry at checkpoint time — its pages are still
+        committed in the pool but it owns no slot).  None when the
+        sequence holds no pages yet."""
+        if not state.pages:
+            return None
+        return jax.device_get(
+            self._extract(self.cache, jnp.asarray(state.pages, jnp.int32)))
+
     def detach(self, slot: int, *, release_pages: bool) -> _PagedSlotState:
         """Remove the slot's state without finishing it.  With
         ``release_pages`` (spill preemption) the sequence's PRIVATE
@@ -764,6 +774,22 @@ class ContinuousEngine:
                                         moe_drop_free=True, moe_capacity=cap,
                                         return_cache=True, remat=False),
             static_argnums=(2,)))
+
+    def clone_fresh(self) -> "ContinuousEngine":
+        """A new engine with the same config/params/layout knobs and
+        EMPTY serving state — the reboot path: device KV, slots, queue
+        and results do not survive a crash; only a host checkpoint does
+        (``serving.scheduler.PreemptiveScheduler.restore``).  Jitted
+        callables come from the module cache, so this is cheap."""
+        kw = dict(n_slots=self.slots.n_slots, max_seq=self.max_seq,
+                  queue_capacity=self.queue.capacity,
+                  kv_layout=self.kv_layout,
+                  prefill_budget_tokens=self.prefill_budget_tokens)
+        if self.kv_layout == "paged":
+            kw.update(page_size=self.slots.page_size,
+                      pool_pages=self.slots.allocator.n_pages,
+                      prefix_cache=self.slots.prefix_index is not None)
+        return ContinuousEngine(self.cfg, self.params, **kw)
 
     def _budget(self):
         b = self.prefill_budget_tokens

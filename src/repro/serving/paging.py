@@ -27,6 +27,7 @@ live sequence ever reads.  The allocator hands out ids ``1..n_pages``.
 from __future__ import annotations
 
 import collections
+import zlib
 from dataclasses import dataclass
 from typing import Deque, Dict, List, Optional
 
@@ -59,6 +60,12 @@ def default_pool_pages(n_slots: int, max_seq: int, page_size: int,
 class PoolExhausted(RuntimeError):
     """Raised on an allocation the reservation discipline should have
     made impossible (internal invariant violation)."""
+
+
+class SpillCorruption(RuntimeError):
+    """A spill record failed its checksum — the host copy cannot be
+    trusted and must never be grafted back into paged KV.  The caller
+    redoes the sequence from prefill instead."""
 
 
 class BlockAllocator:
@@ -333,6 +340,8 @@ class SpillRecord:
     epoch: int = 0              # spills merged into this record
     nbytes: int = 0             # bytes this record holds on the host
     #                             (compressed bytes under a codec)
+    crc: int = 0                # CRC32 over the packed record bytes,
+    #                             computed at merge, verified at every read
 
 
 class DeltaSpillStore:
@@ -359,11 +368,24 @@ class DeltaSpillStore:
     just written).  Evicted rids are surfaced through ``take_evicted``
     so the scheduler can redo long-idle swapped sequences from prefill
     instead of resuming from a snapshot that no longer exists.
+
+    INTEGRITY: every record carries a CRC32 over its packed host bytes
+    (the compressed blobs under a codec), computed at ``merge`` and
+    verified on every read — ``snapshot`` (resume/checkpoint), the base
+    reuse inside ``merge``, and the exit audits in ``drop`` and LRU
+    eviction.  A mismatch discards the record, increments
+    ``n_corruptions_detected`` and (on the read paths) raises
+    :class:`SpillCorruption`; a corrupted snapshot is NEVER returned,
+    so a bit flip in host memory costs a redo-from-prefill, not a
+    silent garbage graft.  An optional
+    :class:`repro.core.faults.FaultInjector` flips a byte in every
+    k-th merged record to prove the detection path end to end.
     """
 
     def __init__(self, page_size: int, *, codec: Optional[str] = None,
                  max_entries: Optional[int] = None,
-                 max_bytes: Optional[int] = None):
+                 max_bytes: Optional[int] = None,
+                 injector=None):
         if codec not in (None, "zstd"):
             raise ValueError(f"unknown spill codec {codec!r}")
         if codec == "zstd" and zstd is None:
@@ -374,9 +396,11 @@ class DeltaSpillStore:
         self.codec = codec
         self.max_entries = max_entries
         self.max_bytes = max_bytes
+        self.injector = injector
         self._by_rid: Dict[int, SpillRecord] = {}   # insertion-ordered: LRU
         self._evicted: List[int] = []
         self.stored_bytes = 0       # live host bytes (compressed if codec)
+        self.n_corruptions_detected = 0
         self.n_evictions = 0
         self.n_spills = 0
         self.n_delta_spills = 0     # spills that shipped < the live set
@@ -396,8 +420,16 @@ class DeltaSpillStore:
     def snapshot(self, rid: int):
         """The full prefix-shaped KV snapshot of ``rid``'s record
         (decompressed under a codec) — what a resume grafts back.  The
-        record is the ONLY host copy of a store-managed spill."""
-        return self._unpack(self._by_rid[rid].kv)
+        record is the ONLY host copy of a store-managed spill.  Raises
+        :class:`SpillCorruption` (and discards the record) if the bytes
+        no longer match their merge-time checksum."""
+        rec = self._by_rid[rid]
+        if self._crc(rec.kv) != rec.crc:
+            self._discard_corrupt(rid)
+            raise SpillCorruption(
+                f"spill record for rid {rid} failed its checksum at "
+                f"snapshot (epoch {rec.epoch})")
+        return self._unpack(rec.kv)
 
     def synced_pages(self, rid: int) -> int:
         rec = self._by_rid.get(rid)
@@ -406,6 +438,50 @@ class DeltaSpillStore:
     @staticmethod
     def _nbytes(tree) -> int:
         return int(sum(np.asarray(l).nbytes for l in jax.tree.leaves(tree)))
+
+    # -- integrity -----------------------------------------------------------
+    def _crc(self, kv) -> int:
+        """CRC32 over the packed record bytes — array contents without a
+        codec, the compressed blobs with one (verified BEFORE any
+        decompression touches the data)."""
+        c = 0
+        if self.codec is None:
+            for l in jax.tree.leaves(kv):
+                a = np.ascontiguousarray(np.asarray(l))
+                c = zlib.crc32(a.tobytes(), c)
+        else:
+            for blob, _, _ in kv[1]:
+                c = zlib.crc32(blob, c)
+        return c
+
+    def _discard_corrupt(self, rid: int) -> None:
+        rec = self._by_rid.pop(rid)
+        self.stored_bytes -= rec.nbytes
+        self.n_corruptions_detected += 1
+
+    def _maybe_inject(self, rid: int) -> None:
+        """Fault hook: flip one byte of the freshly merged record (in a
+        COPY — ``merge``'s return value aliases caller arrays) without
+        touching its stored checksum, modeling at-rest host corruption
+        the next read must catch."""
+        if self.injector is None or not self.injector.spill_corruption_due():
+            return
+        rec = self._by_rid[rid]
+        if self.codec is None:
+            leaves, treedef = jax.tree.flatten(rec.kv)
+            i = next(j for j, l in enumerate(leaves)
+                     if np.asarray(l).nbytes > 0)
+            a = np.array(np.asarray(leaves[i]), copy=True)
+            raw = a.view(np.uint8).reshape(-1)
+            raw[self.injector.corrupt_offset(a.nbytes)] ^= 0x01
+            leaves[i] = a
+            rec.kv = jax.tree.unflatten(treedef, leaves)
+        else:
+            treedef, packed = rec.kv
+            blob, dt, shape = packed[0]
+            buf = bytearray(blob)
+            buf[self.injector.corrupt_offset(len(buf))] ^= 0x01
+            rec.kv = (treedef, [(bytes(buf), dt, shape)] + packed[1:])
 
     # -- codec --------------------------------------------------------------
     def _pack(self, tree):
@@ -446,6 +522,11 @@ class DeltaSpillStore:
             rec = self._by_rid.pop(rid)
             self.stored_bytes -= rec.nbytes
             self.n_evictions += 1
+            if self._crc(rec.kv) != rec.crc:
+                # exit audit: the corruption never grafted (eviction
+                # already routes through redo-from-prefill), but it must
+                # still be COUNTED or detection coverage lies
+                self.n_corruptions_detected += 1
             self._evicted.append(rid)
 
     def take_evicted(self) -> List[int]:
@@ -459,6 +540,11 @@ class DeltaSpillStore:
         sequence's record and return the full reassembled snapshot."""
         ps = self.page_size
         rec = self._by_rid.get(rid)
+        if rec is not None and self._crc(rec.kv) != rec.crc:
+            self._discard_corrupt(rid)
+            raise SpillCorruption(
+                f"spill record for rid {rid} failed its checksum at merge "
+                f"(epoch {rec.epoch}) — base unusable, re-spill full")
         base = self._unpack(rec.kv) if rec is not None else None
         if rec is None or synced == 0:
             if delta is None or synced != 0:
@@ -496,15 +582,20 @@ class DeltaSpillStore:
                                       else self._pack(delta)[1])
         self._by_rid[rid] = SpillRecord(kv=kv, synced_pages=total_pages,
                                         epoch=(rec.epoch + 1) if rec else 1,
-                                        nbytes=nbytes)
+                                        nbytes=nbytes, crc=self._crc(kv))
         self.stored_bytes += nbytes
         self._evict_over_caps(keep=rid)
+        self._maybe_inject(rid)
         return merged
 
     def drop(self, rid: int) -> None:
         rec = self._by_rid.pop(rid, None)
         if rec is not None:
             self.stored_bytes -= rec.nbytes
+            if self._crc(rec.kv) != rec.crc:
+                # exit audit on the finished-sequence path: never read,
+                # never grafted, but counted (see _evict_over_caps)
+                self.n_corruptions_detected += 1
 
     @staticmethod
     def empty_stats() -> dict:
@@ -519,6 +610,7 @@ class DeltaSpillStore:
             "spill_bytes_full_equiv": 0,
             "spill_bytes_compressed": 0,
             "n_store_evictions": 0,
+            "n_spill_corruptions_detected": 0,
             "spill_store_entries": 0,
             "spill_store_bytes": 0,
         }
@@ -531,7 +623,23 @@ class DeltaSpillStore:
             spill_bytes_full_equiv=self.bytes_full_equiv,
             spill_bytes_compressed=self.bytes_compressed,
             n_store_evictions=self.n_evictions,
+            n_spill_corruptions_detected=self.n_corruptions_detected,
             spill_store_entries=len(self._by_rid),
             spill_store_bytes=self.stored_bytes,
         )
         return out
+
+    # -- checkpoint bookkeeping ---------------------------------------------
+    # Records themselves re-materialize as swap-entry snapshots after a
+    # restore; only the cumulative counters travel through a checkpoint
+    # (so a crash-rollback keeps injected-vs-detected exact).
+    _COUNTER_KEYS = ("n_evictions", "n_spills", "n_delta_spills",
+                     "bytes_spilled", "bytes_compressed", "bytes_full_equiv",
+                     "n_corruptions_detected")
+
+    def counters(self) -> dict:
+        return {k: getattr(self, k) for k in self._COUNTER_KEYS}
+
+    def load_counters(self, d: dict) -> None:
+        for k in self._COUNTER_KEYS:
+            setattr(self, k, d[k])

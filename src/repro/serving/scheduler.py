@@ -54,20 +54,26 @@ tokens, preemption points, and ledger.
 """
 from __future__ import annotations
 
+import os
+import tempfile
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
+import jax
 import numpy as np
 
+from repro.checkpoint.store import load_checkpoint_raw, save_checkpoint
 from repro.core.energy import EnergyModel
+from repro.core.faults import FaultInjector
 from repro.core.gating import ConfidenceGate
 from repro.core.link import ContactSchedule, TransmitLane, \
     payload_bytes_raw, payload_bytes_result
 from repro.core.telemetry import Ledger
-from repro.serving.batching import Request
-from repro.serving.engine import ContinuousEngine, RequestResult
-from repro.serving.paging import DeltaSpillStore
+from repro.serving.batching import Request, ensure_rid_floor
+from repro.serving.engine import ContinuousEngine, RequestResult, \
+    _PagedSlotState, _SlotState
+from repro.serving.paging import DeltaSpillStore, SpillCorruption
 
 
 @dataclass
@@ -108,7 +114,8 @@ class PreemptiveScheduler:
                  preempt_mode: str = "spill", delta_spill: bool = True,
                  spill_codec: Optional[str] = None,
                  spill_max_entries: Optional[int] = None,
-                 spill_max_bytes: Optional[int] = None):
+                 spill_max_bytes: Optional[int] = None,
+                 fault_injector: Optional[FaultInjector] = None):
         if preempt_mode not in ("spill", "resident"):
             raise ValueError(f"unknown preempt_mode {preempt_mode!r}")
         self.engine = engine
@@ -123,7 +130,8 @@ class PreemptiveScheduler:
         self.store: Optional[DeltaSpillStore] = (
             DeltaSpillStore(engine.slots.page_size, codec=spill_codec,
                             max_entries=spill_max_entries,
-                            max_bytes=spill_max_bytes)
+                            max_bytes=spill_max_bytes,
+                            injector=fault_injector)
             if delta_spill and hasattr(engine.slots, "allocator") else None)
         self.held_pages = 0             # transmit-lane page hold (overlap)
         self.swapped: Dict[int, SwapEntry] = {}      # rid -> entry
@@ -131,6 +139,8 @@ class PreemptiveScheduler:
         self.n_spills = 0
         self.n_resumes = 0
         self.n_redo_from_prefill = 0    # swap entries lost to store eviction
+        self.n_redo_from_corruption = 0  # swap entries lost to a failed
+        #                                  spill-record checksum
         self.swapped_steps = 0          # total clock ticks spent swapped out
         self.resume_s: List[float] = [] # wall seconds per restore
 
@@ -180,9 +190,18 @@ class PreemptiveScheduler:
                     # codec/caps really bound host spill memory
                     synced = max(st0.synced_pages, shared)
                     delta = slots.snapshot(slot, since=synced)
-                    self.store.merge(st0.request.rid, delta,
-                                     synced - shared,
-                                     len(st0.pages) - shared)
+                    try:
+                        self.store.merge(st0.request.rid, delta,
+                                         synced - shared,
+                                         len(st0.pages) - shared)
+                    except SpillCorruption:
+                        # the base record failed its checksum (the store
+                        # discarded it) — but every live page is still
+                        # on device, so re-ship the FULL private set as
+                        # a fresh record instead of grafting garbage
+                        full = slots.snapshot(slot, since=shared)
+                        self.store.merge(st0.request.rid, full, 0,
+                                         len(st0.pages) - shared)
                 else:
                     kv = slots.snapshot(slot, since=shared)
             # else: PREFILLING with no chunk landed yet — nothing to
@@ -232,15 +251,30 @@ class PreemptiveScheduler:
                 # floors at the shared boundary, not 0
                 st.synced_pages = getattr(st, "shared_pages", 0)
 
+    def _redo_corrupt(self, entry: SwapEntry) -> None:
+        """A spill record failed its checksum: the host copy is gone and
+        was the ONLY copy, so the request redoes from prefill — the same
+        recovery lane as a store eviction (greedy decode keeps the redo
+        token-exact), never a garbage graft."""
+        self.engine.slots.discard_detached(entry.state)
+        self.engine.queue.requeue_front(entry.state.request)
+        self.n_redo_from_corruption += 1
+
     def resume(self, rid: int, slot: int) -> None:
-        """Re-place a swapped sequence into a free slot, token-exactly."""
+        """Re-place a swapped sequence into a free slot, token-exactly.
+        If the sequence's spill record fails its integrity check the
+        resume turns into a redo-from-prefill (the slot stays free)."""
         entry = self.swapped.pop(rid)
         t0 = time.perf_counter()
         kv = entry.kv
         from_store = (entry.spilled and kv is None and self.store is not None
                       and rid in self.store)
         if from_store:
-            kv = self.store.snapshot(rid)
+            try:
+                kv = self.store.snapshot(rid)
+            except SpillCorruption:
+                self._redo_corrupt(entry)
+                return
         self.engine.slots.restore(slot, entry.state, kv,
                                   spilled=entry.spilled)
         if from_store:
@@ -447,6 +481,7 @@ class PreemptiveScheduler:
             "n_spills": self.n_spills,
             "n_resumes": self.n_resumes,
             "n_redo_from_prefill": self.n_redo_from_prefill,
+            "n_redo_from_corruption": self.n_redo_from_corruption,
             "swapped_steps": self.swapped_steps,
             "resume_latency_s_mean": round(float(np.mean(lat)), 6) if lat
             else 0.0,
@@ -454,6 +489,207 @@ class PreemptiveScheduler:
             else 0.0,
             **delta,
         }
+
+    # -- crash-safe checkpoint / restore -------------------------------------
+    _COUNTER_KEYS = ("n_preemptions", "n_spills", "n_resumes",
+                     "n_redo_from_prefill", "n_redo_from_corruption",
+                     "swapped_steps")
+
+    def checkpoint(self, path: str,
+                   extra_meta: Optional[dict] = None) -> int:
+        """Serialize the COMPLETE serving state — request queue, swap
+        ledger (store-managed spill records materialize through
+        ``DeltaSpillStore.snapshot``), active slot states with their
+        live KV, finished results and cumulative counters — through
+        ``repro.checkpoint.store``.  Non-destructive: the engine keeps
+        running; call it periodically and a crash loses at most the
+        work since the last call (``restore`` resumes token-exactly —
+        greedy decode re-derives identical tokens from the snapshotted
+        KV).  A spill record that fails its checksum here is handled
+        like any detected corruption: the sequence redoes from prefill
+        and enters the checkpoint as queued.  Returns bytes written."""
+        eng = self.engine
+        slots = eng.slots
+        paged = hasattr(slots, "allocator")
+        tree: Dict[str, np.ndarray] = {}
+        seqs: List[dict] = []
+        requests: Dict[int, Request] = {}
+
+        def add_seq(st, kind: str, kv, preempted_step: int) -> None:
+            rid = st.request.rid
+            requests[rid] = st.request
+            n = 0
+            if kv is not None:
+                leaves = jax.tree.leaves(kv)
+                for i, leaf in enumerate(leaves):
+                    tree[f"kv/{rid}/{i}"] = np.asarray(leaf)
+                n = len(leaves)
+            if st.last_logits is not None:
+                tree[f"logits/{rid}"] = np.asarray(st.last_logits)
+            seqs.append({
+                "rid": int(rid), "kind": kind, "pos": int(st.pos),
+                "next_tok": int(st.next_tok),
+                "emitted": [int(x) for x in st.emitted],
+                "admitted_step": int(st.admitted_step),
+                "first_token_step": int(st.first_token_step),
+                "phase": st.phase,
+                "n_preemptions": int(st.n_preemptions),
+                "preempted_step": int(preempted_step),
+                "n_kv_leaves": n,
+            })
+
+        # swapped entries first: materializing a store-managed spill can
+        # DETECT a corrupted record, which requeues its request — the
+        # queue must be serialized after that can no longer happen
+        for e in list(self.swapped.values()):
+            rid = e.rid
+            if e.kv is not None:
+                kv = e.kv
+            elif not e.spilled:
+                kv = slots.snapshot_state(e.state)   # resident (paged)
+            elif self.store is not None and rid in self.store:
+                try:
+                    kv = self.store.snapshot(rid)
+                except SpillCorruption:
+                    del self.swapped[rid]
+                    self._redo_corrupt(e)
+                    continue
+            else:
+                kv = None    # PREFILLING spill before any page landed
+            add_seq(e.state, "swapped", kv, e.preempted_step)
+        for slot in slots.active_slots():
+            add_seq(slots.states[slot], "active", slots.snapshot(slot),
+                    eng.clock)
+        queued = []
+        for r in eng.queue.items():
+            requests[r.rid] = r
+            queued.append(int(r.rid))
+        results_meta = {}
+        for rid, res in eng.results.items():
+            results_meta[str(rid)] = {
+                "prompt_len": int(res.prompt_len),
+                "admitted_step": int(res.admitted_step),
+                "finished_step": int(res.finished_step),
+                "first_token_step": int(res.first_token_step),
+                "n_preemptions": int(res.n_preemptions),
+            }
+            tree[f"rtokens/{rid}"] = np.asarray(res.tokens)
+            if res.logits_last is not None:
+                tree[f"rlogits/{rid}"] = np.asarray(res.logits_last)
+        req_meta = {}
+        for rid, r in requests.items():
+            req_meta[str(rid)] = {
+                "max_new": int(r.max_new),
+                "arrival_t": float(r.arrival_t),
+                "priority": int(r.priority),
+                "prefill_pos": int(r.prefill_pos),
+            }
+            tree[f"prompt/{rid}"] = np.asarray(r.prompt)
+        all_rids = [*requests, *eng.results]
+        meta = {
+            "kv_layout": eng.kv_layout,
+            "page_size": int(slots.page_size) if paged else 0,
+            "clock": int(eng.clock),
+            "prefill_tokens_total": int(eng.prefill_tokens_total),
+            "finish_order": [int(x) for x in eng.finish_order],
+            "queued": queued,
+            "sequences": seqs,
+            "requests": req_meta,
+            "results": results_meta,
+            "max_rid": int(max(all_rids)) if all_rids else -1,
+            "sched": {k: int(getattr(self, k))
+                      for k in self._COUNTER_KEYS},
+            "store": (self.store.counters()
+                      if self.store is not None else None),
+            "extra": extra_meta or {},
+        }
+        return save_checkpoint(path, tree, meta=meta)
+
+    def restore(self, path: str) -> dict:
+        """Rebuild serving state from a checkpoint into THIS (fresh)
+        scheduler/engine pair — the reboot path: device KV did not
+        survive, so every checkpointed sequence re-enters as a spilled
+        swap entry whose resume re-reserves pages and grafts the
+        snapshotted KV back (bit-exact), and queued requests rejoin the
+        queue in order.  Returns the checkpoint's ``extra`` meta."""
+        eng = self.engine
+        slots = eng.slots
+        paged = hasattr(slots, "allocator")
+        if (eng.clock != 0 or eng.results or eng.finish_order
+                or len(eng.queue) or slots.any_active() or self.swapped):
+            raise RuntimeError(
+                "restore() needs a FRESH engine/scheduler (reboot builds "
+                "new ones, e.g. via ContinuousEngine.clone_fresh)")
+        leaves, meta = load_checkpoint_raw(path)
+        if meta["kv_layout"] != eng.kv_layout:
+            raise RuntimeError(
+                f"checkpoint kv_layout {meta['kv_layout']!r} != engine "
+                f"{eng.kv_layout!r}")
+        if paged and meta["page_size"] != slots.page_size:
+            raise RuntimeError(
+                f"checkpoint page_size {meta['page_size']} != engine "
+                f"{slots.page_size}")
+        treedef = jax.tree.structure(slots.cache)
+
+        def kv_of(rid: int, n: int):
+            if n == 0:
+                return None
+            return jax.tree.unflatten(
+                treedef, [leaves[f"kv/{rid}/{i}"] for i in range(n)])
+
+        requests: Dict[int, Request] = {}
+        for rid_s, r in meta["requests"].items():
+            rid = int(rid_s)
+            requests[rid] = Request(
+                prompt=np.asarray(leaves[f"prompt/{rid}"]),
+                max_new=int(r["max_new"]), rid=rid,
+                arrival_t=float(r["arrival_t"]),
+                priority=int(r["priority"]),
+                prefill_pos=int(r["prefill_pos"]))
+        eng.clock = int(meta["clock"])
+        eng.prefill_tokens_total = int(meta["prefill_tokens_total"])
+        eng.finish_order = [int(x) for x in meta["finish_order"]]
+        for rid_s, r in meta["results"].items():
+            rid = int(rid_s)
+            eng.results[rid] = RequestResult(
+                rid=rid, tokens=leaves[f"rtokens/{rid}"],
+                prompt_len=int(r["prompt_len"]),
+                admitted_step=int(r["admitted_step"]),
+                finished_step=int(r["finished_step"]),
+                first_token_step=int(r["first_token_step"]),
+                n_preemptions=int(r["n_preemptions"]),
+                logits_last=leaves.get(f"rlogits/{rid}"))
+        for rid in meta["queued"]:
+            eng.queue.submit(requests[int(rid)])
+        for s in meta["sequences"]:
+            rid = int(s["rid"])
+            req = requests[rid]
+            common = dict(request=req, pos=int(s["pos"]),
+                          next_tok=int(s["next_tok"]),
+                          emitted=[int(x) for x in s["emitted"]],
+                          admitted_step=int(s["admitted_step"]),
+                          first_token_step=int(s["first_token_step"]),
+                          phase=s["phase"],
+                          n_preemptions=int(s["n_preemptions"]),
+                          last_logits=leaves.get(f"logits/{rid}"))
+            if paged:
+                # shared-prefix refs died with the old pool: the restored
+                # entry is fully private, budgeted for its whole lifetime
+                st = _PagedSlotState(**common, pages=[],
+                                     budget=slots._lifetime_pages(req),
+                                     synced_pages=0, shared_pages=0)
+            else:
+                st = _SlotState(**common)
+            self.swapped[rid] = SwapEntry(
+                state=st, kv=kv_of(rid, int(s["n_kv_leaves"])),
+                preempted_step=int(s["preempted_step"]), spilled=True)
+        for k in self._COUNTER_KEYS:
+            setattr(self, k, int(meta["sched"][k]))
+        if self.store is not None and meta.get("store"):
+            self.store.load_counters(meta["store"])
+        # restored rids must never collide with future fresh Requests
+        ensure_rid_floor(int(meta["max_rid"]) + 1)
+        return meta.get("extra", {})
 
 
 # ==========================================================================
@@ -473,6 +709,8 @@ class SpaceGroundReport:
     windows: List[Tuple[int, int]] = field(default_factory=list)
     sat_stats: dict = field(default_factory=dict)   # PreemptiveScheduler.stats
     decode_steps_in_window: int = 0     # overlap: decode ticks during passes
+    n_reboots: int = 0                  # injected crashes survived via restore
+    lane_stats: dict = field(default_factory=dict)  # TransmitLane.state()
 
 
 class SpaceGroundScheduler:
@@ -516,9 +754,17 @@ class SpaceGroundScheduler:
                  preempt_mode: str = "spill",
                  overlap: bool = True,
                  comm_reserve_pages: int = 2,
-                 delta_spill: bool = True):
-        self.sat = PreemptiveScheduler(sat_engine, preempt_mode=preempt_mode,
-                                       delta_spill=delta_spill)
+                 delta_spill: bool = True,
+                 frame_bytes: Optional[int] = None,
+                 link_max_retries: int = 8,
+                 faults: Optional[FaultInjector] = None,
+                 checkpoint_every: int = 0,
+                 checkpoint_path: Optional[str] = None):
+        self._sat_kw = dict(preempt_mode=preempt_mode,
+                            delta_spill=delta_spill)
+        self.faults = faults
+        self.sat = PreemptiveScheduler(sat_engine, fault_injector=faults,
+                                       **self._sat_kw)
         self.overlap = overlap
         self.comm_reserve_pages = comm_reserve_pages
         self.ground = ground_engine
@@ -530,6 +776,26 @@ class SpaceGroundScheduler:
         self.s_per_step = s_per_step
         self.horizon_steps = int(horizon_s / s_per_step)
         self.windows = self.schedule.step_windows(s_per_step, horizon_s)
+        self.frame_bytes = frame_bytes
+        self.link_max_retries = link_max_retries
+        self.checkpoint_every = int(checkpoint_every)
+        if faults is not None:
+            p = faults.plan
+            if ((p.frame_loss_rate > 0.0 or p.frame_corrupt_rate > 0.0)
+                    and frame_bytes is None):
+                raise ValueError(
+                    "a lossy FaultPlan needs frame_bytes: only the framed "
+                    "lane can detect loss/corruption and retransmit")
+            if p.crash_at_tick is not None and self.checkpoint_every <= 0:
+                raise ValueError(
+                    "FaultPlan schedules a crash but checkpoint_every is "
+                    "0 — there would be nothing to restore from")
+            # early LOS: ionospheric scintillation cuts passes short
+            self.windows = faults.truncate_step_windows(self.windows)
+        if self.checkpoint_every > 0 and checkpoint_path is None:
+            checkpoint_path = os.path.join(
+                tempfile.mkdtemp(prefix="sgs_ckpt_"), "sat.ckpt")
+        self._ckpt_path = checkpoint_path
         # downlink budget per in-window tick, derived from the link
         # model's own loss-adjusted rate (downlink_time_s(1) = s/byte)
         self.bytes_per_step = (s_per_step
@@ -542,6 +808,47 @@ class SpaceGroundScheduler:
         starts = [lo for lo, hi in self.windows if hi > t]
         return min(starts) if starts else None
 
+    def _make_lane(self) -> TransmitLane:
+        if self.frame_bytes is not None:
+            return TransmitLane(frame_bytes=self.frame_bytes,
+                                max_retries=self.link_max_retries,
+                                injector=self.faults)
+        return TransmitLane()
+
+    def _write_checkpoint(self, lane: TransmitLane) -> None:
+        """Checkpoint the full satellite side: serving state through
+        ``PreemptiveScheduler.checkpoint`` plus the downlink backlog,
+        lane counters and injector state as ``extra`` meta, so a reboot
+        rolls the WHOLE satellite back to one consistent instant (the
+        injector's RNG rolls back too — post-restore fault draws replay
+        identically, keeping injected == detected accounting exact)."""
+        extra = {
+            "lane": [[int(rid), bool(esc), float(nb)]
+                     for (rid, esc), nb in lane.pending_payloads()],
+            "lane_state": lane.state(),
+        }
+        if self.faults is not None:
+            extra["faults"] = self.faults.state()
+        self.sat.checkpoint(self._ckpt_path, extra_meta=extra)
+
+    def _reboot(self) -> TransmitLane:
+        """Simulated satellite reboot: device memory and every live
+        Python object on the sat side are gone; rebuild a fresh engine
+        (weights persist — they live in the read-only image) + scheduler
+        + lane from the last checkpoint.  Ground-side state is on Earth
+        and survives untouched."""
+        eng = self.sat.engine.clone_fresh()
+        self.sat = PreemptiveScheduler(eng, fault_injector=self.faults,
+                                       **self._sat_kw)
+        extra = self.sat.restore(self._ckpt_path)
+        lane = self._make_lane()
+        for rid, esc, nb in extra["lane"]:
+            lane.enqueue((int(rid), bool(esc)), float(nb))
+        lane.load_state(extra["lane_state"])
+        if self.faults is not None and "faults" in extra:
+            self.faults.load_state(extra["faults"])
+        return lane
+
     def run(self, requests: List[Request]) -> SpaceGroundReport:
         rep = SpaceGroundReport(tokens={}, sat_results={}, ground_results={},
                                 escalated=[], undelivered=[],
@@ -551,7 +858,13 @@ class SpaceGroundScheduler:
             self.sat.submit(r)
         by_rid = {r.rid: r for r in requests}
         ground_to_rid: Dict[int, int] = {}
-        lane = TransmitLane()            # items: (rid, escalate)
+        lane = self._make_lane()         # items: (rid, escalate)
+        # ground-side memory: a crash rolls the SATELLITE back to its
+        # last checkpoint, so work finished/downlinked in between is
+        # redone and re-delivered — Earth must not double-count it
+        classified: set = set()          # rids already in the ledger
+        delivered: set = set()           # rids already landed on Earth
+        last_ckpt: Optional[int] = None
 
         def classify(rid: int) -> None:
             """Queue a finished satellite sequence for downlink."""
@@ -563,12 +876,14 @@ class SpaceGroundScheduler:
                 nbytes = payload_bytes_raw(1, (res.prompt_len,), 4)
             else:
                 nbytes = payload_bytes_result(len(res.tokens))
-            led.add("items_total", 1)
-            led.add("items_escalated", int(esc))
-            led.add("bytes_results", 0 if esc else nbytes)
-            led.add("bytes_raw_escalated", nbytes if esc else 0)
-            led.add("bytes_bentpipe_baseline",
-                    payload_bytes_raw(1, (res.prompt_len,), 4))
+            if rid not in classified:    # a post-reboot redo re-finishes
+                classified.add(rid)
+                led.add("items_total", 1)
+                led.add("items_escalated", int(esc))
+                led.add("bytes_results", 0 if esc else nbytes)
+                led.add("bytes_raw_escalated", nbytes if esc else 0)
+                led.add("bytes_bentpipe_baseline",
+                        payload_bytes_raw(1, (res.prompt_len,), 4))
             lane.enqueue((rid, esc), nbytes)
 
         def decode_tick(in_window: bool) -> None:
@@ -593,6 +908,21 @@ class SpaceGroundScheduler:
                 # backlog missed every window: record, don't silently drop
                 rep.undelivered = [rid for rid, _ in lane.clear()]
                 break
+            if (self._ckpt_path is not None and self.checkpoint_every > 0
+                    and (last_ckpt is None
+                         or t - last_ckpt >= self.checkpoint_every)):
+                self._write_checkpoint(lane)
+                last_ckpt = t
+            if self.faults is not None and self.faults.crash_due(t):
+                # injected satellite reboot: everything on the sat side
+                # rolls back to the last checkpoint and replays
+                # token-exactly; Earth keeps what already landed
+                self.faults.note_crash()
+                rep.n_reboots += 1
+                lane = self._reboot()
+                t = self.sat.clock
+                last_ckpt = t            # restore IS the checkpoint state
+                continue
             in_window = self._in_window(t)
             if in_window:
                 if self.overlap:
@@ -606,7 +936,13 @@ class SpaceGroundScheduler:
                 # the transmit lane drains this tick's byte budget FIFO
                 tx_active = len(lane) > 0
                 sent_before = lane.bytes_sent
+                lost_before = lane.bytes_lost
+                retx_before = lane.bytes_retransmitted
                 for rid, esc in lane.tick(self.bytes_per_step):
+                    if rid in delivered:
+                        continue         # post-reboot re-delivery: Earth
+                        #                  already has this answer
+                    delivered.add(rid)
                     if esc:
                         rep.escalated.append(rid)
                         src = by_rid[rid]
@@ -618,8 +954,18 @@ class SpaceGroundScheduler:
                         g.arrival_t = float(self.ground.clock)
                         ground_to_rid[g.rid] = rid
                         self.ground.submit(g)
+                # a payload that burned its whole retry budget goes back
+                # on the queue: the satellite never silently drops an
+                # answer — it re-ships (and re-meters) until it lands
+                for item, nb in lane.take_failed():
+                    led.add("n_payload_retransmits", 1)
+                    lane.enqueue(item, nb)
                 if tx_active:
                     led.add("bytes_downlinked", lane.bytes_sent - sent_before)
+                    if lane.framed:
+                        led.add("bytes_lost", lane.bytes_lost - lost_before)
+                        led.add("bytes_retransmitted",
+                                lane.bytes_retransmitted - retx_before)
                     led.add("downlink_s", self.s_per_step)
                     led.add("energy_comm_j",
                             self.energy.comm_energy_j(self.s_per_step))
@@ -668,4 +1014,5 @@ class SpaceGroundScheduler:
                 rep.tokens[rid] = res.tokens
         rep.n_preemptions = self.sat.n_preemptions
         rep.sat_stats = self.sat.stats()
+        rep.lane_stats = lane.state()
         return rep

@@ -1,0 +1,411 @@
+"""Fault injection and crash-safe serving: the seeded ``core.faults``
+plan, the framed CRC+NACK transmit lane, spill-record integrity, and
+token-exact checkpoint/restore across an injected satellite reboot.
+
+The oracle throughout: a fault plan may cost time and bytes — it must
+NEVER change an answer.  Every replay under faults is compared
+token-for-token against its fault-free twin.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.faults import FaultInjector, FaultPlan
+from repro.core.gating import ConfidenceGate
+from repro.core.link import ContactSchedule, TransmitLane
+from repro.models import transformer as T
+from repro.serving.batching import Request
+from repro.serving.engine import ContinuousEngine
+from repro.serving.paging import DeltaSpillStore, SpillCorruption
+from repro.serving.scheduler import (PreemptiveScheduler,
+                                     SpaceGroundScheduler)
+
+from helpers import f32_cfg
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return f32_cfg("smollm-360m")
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return T.init_params(jax.random.PRNGKey(0), cfg, max_seq=64)
+
+
+def _prompt(rng, n, vocab):
+    return rng.integers(1, vocab, n).astype(np.int32)
+
+
+def _assert_drained(eng):
+    alloc = getattr(eng.slots, "allocator", None)
+    if alloc is not None:
+        assert alloc.in_use == 0 and alloc.reserved == 0
+        assert alloc.n_live_refs() == 0
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan / FaultInjector
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_validates_rates():
+    with pytest.raises(ValueError):
+        FaultPlan(frame_loss_rate=0.7, frame_corrupt_rate=0.5)  # sum > 1
+    with pytest.raises(ValueError):
+        FaultPlan(frame_loss_rate=-0.1)
+    with pytest.raises(ValueError):
+        FaultPlan(truncate_every=1, truncate_frac=0.0)
+    FaultPlan(frame_loss_rate=1.0)                              # boundary ok
+
+
+def test_injector_deterministic_and_counted():
+    plan = FaultPlan(seed=5, frame_loss_rate=0.3, frame_corrupt_rate=0.2)
+    inj1, inj2 = FaultInjector(plan), FaultInjector(plan)
+    fates1 = [inj1.frame_fate() for _ in range(200)]
+    fates2 = [inj2.frame_fate() for _ in range(200)]
+    assert fates1 == fates2                       # seeded: replayable
+    assert inj1.n_frames_lost == fates1.count("lost") > 0
+    assert inj1.n_frame_corruptions == fates1.count("corrupt") > 0
+    assert inj1.n_corruptions_injected == inj1.n_frame_corruptions
+
+
+def test_injector_fate_short_circuits_when_disarmed():
+    """A rate-free plan must not consume RNG draws, so arming only the
+    spill fault leaves the frame stream untouched (and vice versa)."""
+    inj = FaultInjector(FaultPlan(seed=0, spill_corrupt_every=2))
+    before = inj.state()["rng"]
+    assert all(inj.frame_fate() == "ok" for _ in range(50))
+    assert inj.state()["rng"] == before
+
+
+def test_injector_state_roundtrip_replays_stream():
+    plan = FaultPlan(seed=9, frame_loss_rate=0.25, frame_corrupt_rate=0.25)
+    inj = FaultInjector(plan)
+    [inj.frame_fate() for _ in range(37)]
+    mid = inj.state()
+    tail = [inj.frame_fate() for _ in range(50)]
+    inj2 = FaultInjector(plan)
+    inj2.load_state(mid)
+    assert [inj2.frame_fate() for _ in range(50)] == tail
+    assert inj2.n_frames_lost == inj.n_frames_lost
+
+
+def test_corrupt_bytes_flips_exactly_one_bit():
+    inj = FaultInjector(FaultPlan(seed=1))
+    data = bytes(range(64))
+    bad = inj.corrupt_bytes(data)
+    assert len(bad) == len(data) and bad != data
+    diff = [a ^ b for a, b in zip(data, bad) if a != b]
+    assert len(diff) == 1 and bin(diff[0]).count("1") == 1
+
+
+def test_truncate_step_windows_every_kth():
+    inj = FaultInjector(FaultPlan(seed=0, truncate_every=2,
+                                  truncate_frac=0.5))
+    wins = [(0, 10), (20, 30), (40, 50), (60, 70)]
+    out = inj.truncate_step_windows(wins)
+    assert out[0] == (0, 10) and out[2] == (40, 50)   # untouched
+    assert out[1] == (20, 25) and out[3] == (60, 65)  # cut to 50%
+    assert inj.n_windows_truncated == 2
+
+
+# ---------------------------------------------------------------------------
+# framed transmit lane
+# ---------------------------------------------------------------------------
+
+def test_framed_lossless_matches_unframed_goodput():
+    """Without faults, framing is invisible whenever the tick budget is
+    frame-aligned: same completions in the same order, same goodput
+    bytes (frames are whole-or-nothing, so a non-aligned budget may
+    legally trail the byte-granular lane within a tick)."""
+    plain, framed = TransmitLane(), TransmitLane(frame_bytes=25)
+    for lane in (plain, framed):
+        lane.enqueue("a", 100.0)
+        lane.enqueue("b", 75.0)
+    for _ in range(4):
+        assert plain.tick(50.0) == framed.tick(50.0)
+    assert framed.bytes_sent == plain.bytes_sent == 175.0
+    assert framed.n_completed == 2
+    assert framed.n_corruptions_detected == 0
+    assert framed.frame_bytes_attempted == 175.0
+
+
+def test_framed_lossy_delivers_all_and_detects_all():
+    inj = FaultInjector(FaultPlan(seed=2, frame_loss_rate=0.3,
+                                  frame_corrupt_rate=0.2))
+    lane = TransmitLane(frame_bytes=32, max_retries=16, injector=inj)
+    sizes = [100.0, 50.0, 200.0, 10.0]
+    for i, nb in enumerate(sizes):
+        lane.enqueue(i, nb)
+    done = []
+    for _ in range(400):
+        done += lane.tick(64.0)
+        if len(lane) == 0:
+            break
+    assert sorted(done) == [0, 1, 2, 3]          # ARQ delivered everything
+    assert lane.n_retransmits > 0 and lane.bytes_retransmitted > 0
+    assert lane.n_frames_lost == inj.n_frames_lost > 0
+    assert lane.n_corruptions_detected == inj.n_frame_corruptions > 0
+    assert lane.n_silent_corruptions == 0
+    assert lane.bytes_sent == sum(sizes)         # goodput: payload bytes once
+    assert abs(lane.frame_bytes_attempted
+               - (lane.bytes_sent + lane.bytes_lost + lane.bytes_corrupt)
+               ) < 1e-9
+
+
+def test_framed_retry_exhaustion_fails_payload():
+    inj = FaultInjector(FaultPlan(seed=0, frame_loss_rate=1.0))
+    lane = TransmitLane(frame_bytes=32, max_retries=2, injector=inj)
+    lane.enqueue("doomed", 48.0)
+    for _ in range(20):
+        assert lane.tick(64.0) == []
+        if lane.n_payload_failures:
+            break
+    assert lane.n_payload_failures == 1
+    assert lane.take_failed() == [("doomed", 48.0)]   # caller may re-enqueue
+    assert len(lane) == 0 and lane.bytes_sent == 0.0
+
+
+def test_framed_lane_rejects_bad_config():
+    with pytest.raises(ValueError):
+        TransmitLane(frame_bytes=0)
+    with pytest.raises(ValueError):
+        TransmitLane(injector=FaultInjector(FaultPlan()))  # needs framing
+
+
+# ---------------------------------------------------------------------------
+# spill-record integrity
+# ---------------------------------------------------------------------------
+
+def _kv(pages, ps=4, fill=1.0):
+    return {"k": np.full((1, 2, pages * ps, 3), fill, np.float32)}
+
+
+def test_spill_store_detects_manual_corruption_at_snapshot():
+    store = DeltaSpillStore(4)
+    store.merge(7, _kv(2), 0, 2)
+    rec = store.record(7)
+    rec.kv["k"][0, 0, 0, 0] += 1.0               # bit rot on the host copy
+    with pytest.raises(SpillCorruption):
+        store.snapshot(7)
+    assert 7 not in store                        # discarded, never grafted
+    assert store.stats()["n_spill_corruptions_detected"] == 1
+    assert store.stored_bytes == 0
+
+
+def test_spill_store_detects_corrupt_base_at_merge():
+    store = DeltaSpillStore(4)
+    store.merge(7, _kv(2), 0, 2)
+    store.record(7).kv["k"][0, 0, 0, 0] += 1.0
+    with pytest.raises(SpillCorruption):
+        store.merge(7, _kv(1, fill=2.0), 2, 3)   # delta onto a rotten base
+    assert 7 not in store
+    # recovery: a FULL re-spill (synced=0) re-establishes the record
+    store.merge(7, _kv(3, fill=3.0), 0, 3)
+    np.testing.assert_array_equal(store.snapshot(7)["k"],
+                                  _kv(3, fill=3.0)["k"])
+
+
+def test_spill_store_injector_corrupts_then_detects():
+    inj = FaultInjector(FaultPlan(seed=0, spill_corrupt_every=2))
+    store = DeltaSpillStore(4, injector=inj)
+    store.merge(1, _kv(2), 0, 2)                 # merge 1: clean
+    store.merge(2, _kv(2), 0, 2)                 # merge 2: injected
+    np.testing.assert_array_equal(store.snapshot(1)["k"], _kv(2)["k"])
+    with pytest.raises(SpillCorruption):
+        store.snapshot(2)
+    assert inj.n_spill_corruptions == 1
+    assert store.stats()["n_spill_corruptions_detected"] == 1
+
+
+def test_spill_store_counter_roundtrip():
+    store = DeltaSpillStore(4)
+    store.merge(1, _kv(2), 0, 2)
+    store.drop(1)
+    other = DeltaSpillStore(4)
+    other.load_counters(store.counters())
+    assert other.counters() == store.counters()
+
+
+# ---------------------------------------------------------------------------
+# scheduler: redo-from-corruption, checkpoint/restore
+# ---------------------------------------------------------------------------
+
+def _reqs(cfg, n, seed=0, max_new=8):
+    rng = np.random.default_rng(seed)
+    return [Request(prompt=_prompt(rng, 10, cfg.vocab_size),
+                    max_new=max_new, arrival_t=float(i)) for i in range(n)]
+
+
+def test_scheduler_redo_from_corruption_token_exact(cfg, params):
+    """Every spill lands corrupted (spill_corrupt_every=1): each resume
+    detects it, redoes from prefill, and still produces the exact
+    uninterrupted token stream — corruption never grafts garbage."""
+    reqs = _reqs(cfg, 3)
+    ref = ContinuousEngine(cfg, params, n_slots=2, max_seq=64).run(
+        [r.clone() for r in reqs])
+    ref_toks = [res.tokens for _, res in sorted(ref.items())]
+
+    eng = ContinuousEngine(cfg, params, n_slots=2, max_seq=64,
+                           kv_layout="paged", page_size=8, pool_pages=12)
+    inj = FaultInjector(FaultPlan(seed=0, spill_corrupt_every=1))
+    sched = PreemptiveScheduler(eng, delta_spill=True, fault_injector=inj)
+    for r in reqs:
+        sched.submit(r)
+    for _ in range(4):
+        sched.step()
+    sched.preempt_all()                          # spills → all corrupted
+    while sched.has_work():
+        sched.step()
+    got = [res.tokens for _, res in sorted(sched.results.items())]
+    assert len(got) == 3
+    for a, b in zip(got, ref_toks):
+        np.testing.assert_array_equal(a, b)
+    assert sched.n_redo_from_corruption >= 1
+    assert inj.n_spill_corruptions >= 1
+    assert sched.stats()["n_spill_corruptions_detected"] >= 1
+    assert len(sched.store) == 0
+    _assert_drained(eng)
+
+
+def test_checkpoint_restore_roundtrip_token_exact(cfg, params, tmp_path):
+    """Checkpoint mid-flight (active + swapped + queued sequences all
+    live), restore into a FRESH engine, and both the original and the
+    restored run finish with the uninterrupted run's exact tokens."""
+    reqs = _reqs(cfg, 4)
+    ref = ContinuousEngine(cfg, params, n_slots=2, max_seq=64).run(
+        [r.clone() for r in reqs])
+    ref_toks = [res.tokens for _, res in sorted(ref.items())]
+
+    eng = ContinuousEngine(cfg, params, n_slots=2, max_seq=64,
+                           kv_layout="paged", page_size=8, pool_pages=12,
+                           prefill_budget_tokens=8)
+    sched = PreemptiveScheduler(eng, delta_spill=True)
+    for r in reqs:
+        sched.submit(r)
+    for _ in range(9):
+        sched.step()
+    sched.preempt_all()                          # swap ledger non-empty
+    path = str(tmp_path / "sat.ckpt")
+    assert sched.checkpoint(path, extra_meta={"tick": 9}) > 0
+
+    while sched.has_work():                      # original keeps running:
+        sched.step()                             # checkpoint is non-destructive
+    orig = [res.tokens for _, res in sorted(sched.results.items())]
+
+    sched2 = PreemptiveScheduler(eng.clone_fresh(), delta_spill=True)
+    assert sched2.restore(path) == {"tick": 9}
+    while sched2.has_work():
+        sched2.step()
+    rest = [res.tokens for _, res in sorted(sched2.results.items())]
+    assert len(orig) == len(rest) == 4
+    for a, b, c in zip(orig, rest, ref_toks):
+        np.testing.assert_array_equal(a, b)
+        np.testing.assert_array_equal(b, c)
+    _assert_drained(sched2.engine)
+
+
+def test_restore_requires_fresh_engine(cfg, params, tmp_path):
+    eng = ContinuousEngine(cfg, params, n_slots=2, max_seq=64,
+                           kv_layout="paged", page_size=8, pool_pages=12)
+    sched = PreemptiveScheduler(eng)
+    sched.submit(_reqs(cfg, 1)[0])
+    path = str(tmp_path / "sat.ckpt")
+    sched.checkpoint(path)
+    sched.step()                                 # no longer fresh
+    with pytest.raises(RuntimeError, match="FRESH"):
+        sched.restore(path)
+
+
+# ---------------------------------------------------------------------------
+# space-ground: fault-armed end-to-end
+# ---------------------------------------------------------------------------
+
+def _sg_trace(cfg, n=6, seed=8):
+    rng = np.random.default_rng(seed)
+    return [Request(prompt=_prompt(rng, int(rng.integers(8, 14)),
+                                   cfg.vocab_size),
+                    max_new=int(rng.integers(8, 14)),
+                    arrival_t=float(i * 2)) for i in range(n)]
+
+
+def _sg(cfg, params, **kw):
+    sat = ContinuousEngine(cfg, params, n_slots=2, max_seq=64,
+                           kv_layout="paged", page_size=8, pool_pages=9,
+                           prefill_budget_tokens=8)
+    gnd = ContinuousEngine(cfg, params, n_slots=2, max_seq=64)
+    return SpaceGroundScheduler(
+        sat, gnd,
+        schedule=ContactSchedule(contact_duration_s=4.0,
+                                 contacts_per_day=8640, seed=3),
+        gate=ConfidenceGate("max_prob", 0.6),
+        s_per_step=1.0, horizon_s=7200.0, comm_reserve_pages=4, **kw)
+
+
+def test_sgs_validates_fault_configuration(cfg, params):
+    lossy = FaultInjector(FaultPlan(frame_loss_rate=0.5))
+    with pytest.raises(ValueError, match="frame_bytes"):
+        _sg(cfg, params, faults=lossy)           # lossy but unframed
+    crashy = FaultInjector(FaultPlan(crash_at_tick=5))
+    with pytest.raises(ValueError, match="checkpoint"):
+        _sg(cfg, params, faults=crashy)          # crash but no checkpoints
+
+
+@pytest.mark.slow
+def test_sgs_all_faults_token_exact(cfg, params):
+    """The tentpole oracle end-to-end: frame loss + corruption, early
+    LOS, spill corruption, and a mid-run crash — the faulted replay's
+    final answers are IDENTICAL to the fault-free replay's, every
+    injected corruption is detected, the crash is survived once, and
+    the satellite drains clean."""
+    trace = _sg_trace(cfg)
+    rep0 = _sg(cfg, params).run([r.clone() for r in trace])
+
+    inj = FaultInjector(FaultPlan(
+        seed=0, frame_loss_rate=0.25, frame_corrupt_rate=0.2,
+        truncate_every=3, truncate_frac=0.5,
+        spill_corrupt_every=2, crash_at_tick=25))
+    sg = _sg(cfg, params, faults=inj, frame_bytes=32,
+             link_max_retries=6, checkpoint_every=8)
+    rep = sg.run([r.clone() for r in trace])
+
+    t0 = [t for _, t in sorted(rep0.tokens.items())]
+    t1 = [t for _, t in sorted(rep.tokens.items())]
+    assert len(t0) == len(t1) == len(trace)
+    for a, b in zip(t0, t1):
+        np.testing.assert_array_equal(a, b)
+    assert rep.n_reboots == 1 == inj.n_crashes
+    assert rep.undelivered == []
+    ls = rep.lane_stats
+    detected = (ls["n_corruptions_detected"]
+                + sg.sat.store.stats()["n_spill_corruptions_detected"])
+    assert detected == inj.n_corruptions_injected
+    assert ls["n_silent_corruptions"] == 0
+    assert inj.n_windows_truncated > 0
+    assert ls["n_retransmits"] > 0
+    assert rep.ledger.get("bytes_retransmitted") > 0
+    assert abs(ls["frame_bytes_attempted"]
+               - (ls["bytes_sent"] + ls["bytes_lost"] + ls["bytes_corrupt"])
+               ) < 1e-6
+    assert len(sg.sat.store) == 0
+    _assert_drained(sg.sat.engine)
+
+
+@pytest.mark.slow
+def test_sgs_crash_only_reboot_resumes_exactly(cfg, params):
+    """Crash-only plan (no link faults, unframed lane): the reboot path
+    alone must be token-exact and leave ledger item counts undoubled."""
+    trace = _sg_trace(cfg, n=4, seed=5)
+    rep0 = _sg(cfg, params).run([r.clone() for r in trace])
+    inj = FaultInjector(FaultPlan(seed=0, crash_at_tick=15))
+    sg = _sg(cfg, params, faults=inj, checkpoint_every=5)
+    rep = sg.run([r.clone() for r in trace])
+    assert rep.n_reboots == 1
+    t0 = [t for _, t in sorted(rep0.tokens.items())]
+    t1 = [t for _, t in sorted(rep.tokens.items())]
+    for a, b in zip(t0, t1):
+        np.testing.assert_array_equal(a, b)
+    # post-rollback re-finishes must not double-count ledger items
+    assert rep.ledger.get("items_total") == len(trace)
+    assert rep0.ledger.get("items_total") == len(trace)
+    _assert_drained(sg.sat.engine)

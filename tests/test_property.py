@@ -102,6 +102,46 @@ def test_contact_windows_ordered_disjoint(contacts, dur):
     assert cap > 0
 
 
+@given(st.integers(0, 2 ** 32 - 1),
+       st.floats(0.0, 0.45), st.floats(0.0, 0.45),
+       st.integers(16, 256),
+       st.lists(st.integers(1, 600), min_size=1, max_size=8),
+       st.integers(10, 200))
+@settings(**SETTINGS)
+def test_framed_lane_ledger_conserves_bytes(seed, loss, corrupt,
+                                            frame_bytes, sizes, budget):
+    """The framed lane's byte ledger conserves under ANY seeded fault
+    plan: every attempted frame byte is accounted as delivered, lost,
+    or corrupted-and-detected — and no payload ever completes with a
+    failed CRC (zero silent corruptions, detections == injections)."""
+    from repro.core.faults import FaultInjector, FaultPlan
+    from repro.core.link import TransmitLane
+
+    inj = FaultInjector(FaultPlan(seed=seed, frame_loss_rate=loss,
+                                  frame_corrupt_rate=corrupt))
+    lane = TransmitLane(frame_bytes=frame_bytes, max_retries=4,
+                        injector=inj)
+    for i, nb in enumerate(sizes):
+        lane.enqueue(i, float(nb))
+    done, failed = [], []
+    for _ in range(500):
+        done += lane.tick(float(budget))
+        failed += [item for item, _ in lane.take_failed()]
+        if len(lane) == 0:
+            break
+    assert abs(lane.frame_bytes_attempted
+               - (lane.bytes_sent + lane.bytes_lost + lane.bytes_corrupt)
+               ) < 1e-6
+    assert lane.n_silent_corruptions == 0
+    assert lane.n_corruptions_detected == inj.n_frame_corruptions
+    assert lane.n_frames_lost == inj.n_frames_lost
+    if len(lane) == 0:                       # drained within the bound
+        assert sorted(done + failed) == list(range(len(sizes)))
+        # goodput counts each completed payload's bytes exactly once
+        assert lane.bytes_sent >= sum(
+            sizes[i] for i in done) - 1e-6
+
+
 # ---------------------------------------------------------------------------
 # ledger
 # ---------------------------------------------------------------------------

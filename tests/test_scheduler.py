@@ -321,6 +321,55 @@ def test_transmit_lane_incremental_drain():
     assert lane.clear() == ["d"] and len(lane) == 0
 
 
+def test_transmit_lane_zero_budget_tick():
+    """A zero-byte tick (a pass tick with no link margin) delivers
+    nothing, sends nothing, and is not a partial-progress tick."""
+    lane = TransmitLane()
+    lane.enqueue("a", 100)
+    assert lane.tick(0) == []
+    assert lane.bytes_sent == 0 and lane.n_partial_ticks == 0
+    assert lane.pending_bytes() == 100
+
+
+def test_transmit_lane_clear_mid_partial_keeps_bytes_sent():
+    """clear() mid-payload returns the pending item but already-sent
+    bytes stay metered — the link really transmitted them."""
+    lane = TransmitLane()
+    lane.enqueue("a", 100)
+    assert lane.tick(30) == []
+    assert lane.bytes_sent == 30
+    assert lane.clear() == ["a"]
+    assert lane.bytes_sent == 30 and len(lane) == 0
+    assert lane.n_completed == 0
+
+
+def test_transmit_lane_partial_ticks_across_window_boundary():
+    """Partial-progress accounting spans a window gap: two partial
+    ticks then completion, with no double count for the idle gap."""
+    lane = TransmitLane()
+    lane.enqueue("a", 100)
+    assert lane.tick(40) == [] and lane.tick(40) == []
+    assert lane.n_partial_ticks == 2           # the gap itself: no tick
+    assert lane.tick(40) == ["a"]
+    assert lane.n_partial_ticks == 2 and lane.n_completed == 1
+    assert lane.bytes_sent == 100
+
+
+def test_contact_windows_dense_schedule_stays_disjoint():
+    """Regression: a contact_duration_s LONGER than the orbital period
+    (negative slack) must still yield ordered, disjoint, positive
+    windows instead of overlapping ones."""
+    sched = ContactSchedule(contact_duration_s=20_000.0,
+                            contacts_per_day=6, seed=0)
+    wins = sched.windows(86_400.0)
+    assert wins, "dense schedule produced no windows"
+    for a, b in wins:
+        assert b > a
+    for (_, b1), (a2, _) in zip(wins, wins[1:]):
+        assert b1 <= a2                        # clamped: no overlap
+    assert sched.downlink_capacity_bytes(86_400.0) > 0
+
+
 def test_hold_pages_spills_only_what_the_reserve_needs(cfg, params):
     """The comm reserve spills the fewest sequences that cover it (the
     largest block table first); everything else keeps decoding through
