@@ -81,6 +81,22 @@ checkpoint/restore (``n_reboots == 1``) with pools and spill store
 drained after.  ``--chaos SEED...`` sweeps FaultPlan seeds and asserts
 the same invariants per seed (the CI chaos step).
 
+The SPECULATIVE section (``speculative``) exercises draft–verify
+decoding in the unified step twice.  The VERIFY micro-bench serves one
+trace through the continuous engine plain, then again with each request
+carrying its own plain-run output as a draft stream (perfect
+acceptance), so every accepted token rides a chunked verify pass
+instead of a decode dispatch.  The CASCADE replay reruns a space-ground
+trace whose prompts dwarf the answers twice — raw-prompt escalation vs
+draft-id escalation (``payload_bytes_draft``) with ground-side batched
+verification.  CI gates (GATE_VERSION 6): both speculative replays are
+token-exact with their plain comparators, accepted-token throughput is
+>= plain decode's tokens/s in fewer engine ticks, drafts are actually
+verified (passes > 0, accepted == drafted under self-drafts), the
+draft escalation ships STRICTLY fewer bytes per escalation than the
+raw path on the same trace, the ground tier answers escalations in
+strictly fewer ticks, and all pools drain.
+
 The gates live in ``scripts/check_bench.py`` (run it locally after the
 benchmark: ``python scripts/check_bench.py BENCH_serving.json``).
 
@@ -105,7 +121,7 @@ CW_PERIOD = 40              # decode ticks between window opens
 CW_DURATION = 8             # ticks per window (gap > max max_new so the
                             # restart baseline cannot livelock)
 CW_MAX_STEPS = 20_000       # replay safety valve
-BENCH_VERSION = 5           # bumped when gated keys change (check_bench)
+BENCH_VERSION = 6           # bumped when gated keys change (check_bench)
 
 # overlap replay: denser passes (so long sequences straddle several and
 # re-preemption exercises the KV-delta format) + a staging reserve that
@@ -167,6 +183,29 @@ FR_SAT_POOL_PAGES = 9
 FR_SAT_PAGE_SIZE = 8
 FR_RESERVE_PAGES = 4
 FR_GATE_THRESHOLD = 0.6     # mixed escalation (raw + compact payloads)
+
+# speculative replay: (a) the VERIFY micro-bench serves the same trace
+# twice through the continuous engine — plain decode vs requests
+# carrying their own plain-run output as a draft stream (perfect
+# acceptance), so the accepted-token throughput gate measures exactly
+# the one-chunk-pass-vs-k-decode-dispatches win; (b) the CASCADE
+# replay reruns a space-ground trace with prompts much longer than
+# answers twice — raw-prompt escalation vs draft-id escalation
+# (speculative=True) — and gates bytes-per-escalation plus ground-tier
+# verify latency.  Both tiers share params, so the satellite's answers
+# are exactly the ground's greedy continuations and every shipped
+# draft is accepted (the repo's preempt/chunk exactness gates are what
+# make that guarantee hold under contention).
+SD_N_REQUESTS = 6
+SD_SLOTS = 2
+SD_PROMPTS = (8, 16)
+SD_MAX_NEW = 32             # fixed decode budget per request
+SD_DRAFT_K = 8              # drafts verified per slot per tick
+SC_N_REQUESTS = 6
+SC_PROMPTS = (24, 40)       # prompts longer than answers: the raw
+SC_MAX_NEW = (6, 12)        # escalation payload dwarfs the draft ids
+SC_GATE_THRESHOLD = 0.9     # escalate (nearly) everything: the section
+                            # is about the escalated path's cost
 
 
 def _make_engine_inputs():
@@ -720,6 +759,143 @@ def _fault_replay_report(cfg, params, *, plan_seed=FR_SEED):
     }
 
 
+def _spec_verify_requests(cfg, drafts=None):
+    from repro.serving.batching import Request
+
+    rng = np.random.default_rng(17)
+    reqs = []
+    for i in range(SD_N_REQUESTS):
+        S = int(rng.integers(SD_PROMPTS[0], SD_PROMPTS[1] + 1))
+        reqs.append(Request(
+            prompt=rng.integers(1, cfg.vocab_size, S).astype(np.int32),
+            max_new=SD_MAX_NEW,
+            draft_toks=None if drafts is None else drafts[i]))
+    return reqs
+
+
+def _spec_verify_run(cfg, params, drafts=None):
+    from repro.serving.engine import ContinuousEngine
+
+    eng = ContinuousEngine(cfg, params, n_slots=SD_SLOTS, max_seq=MAX_SEQ,
+                           page_size=PAGE_SIZE, draft_k=SD_DRAFT_K)
+    reqs = _spec_verify_requests(cfg, drafts)
+    t0 = time.perf_counter()
+    results = eng.run(reqs)
+    wall = time.perf_counter() - t0
+    toks = [results[k].tokens for k in sorted(results)]
+    useful = sum(len(t) for t in toks)
+    alloc = eng.slots.allocator
+    return {"useful_tokens": useful, "wall_s": round(wall, 4),
+            "tokens_per_s": round(useful / wall, 2),
+            "clock_steps": eng.clock,
+            "pool_drained": alloc.in_use == 0 and alloc.reserved == 0,
+            **eng.spec_stats()}, toks
+
+
+def _spec_cascade_trace(cfg):
+    from repro.serving.batching import Request
+
+    rng = np.random.default_rng(5)
+    return [Request(
+        prompt=rng.integers(
+            1, cfg.vocab_size,
+            int(rng.integers(SC_PROMPTS[0], SC_PROMPTS[1] + 1)),
+        ).astype(np.int32),
+        max_new=int(rng.integers(SC_MAX_NEW[0], SC_MAX_NEW[1] + 1)),
+        arrival_t=float(i * 2)) for i in range(SC_N_REQUESTS)]
+
+
+def _serve_spec_cascade(cfg, params, trace, *, speculative):
+    """One space-ground replay of the cascade trace; ``speculative``
+    switches the escalation payload (raw prompt re-decode vs draft-id
+    verification) and NOTHING else — same engines, schedule, gate."""
+    from repro.core.gating import ConfidenceGate
+    from repro.core.link import ContactSchedule
+    from repro.serving.engine import ContinuousEngine
+    from repro.serving.scheduler import SpaceGroundScheduler
+
+    sat = ContinuousEngine(cfg, params, n_slots=SD_SLOTS, max_seq=MAX_SEQ,
+                           prefill_budget_tokens=8)
+    gnd = ContinuousEngine(cfg, params, n_slots=SD_SLOTS, max_seq=MAX_SEQ,
+                           draft_k=SD_DRAFT_K)
+    sg = SpaceGroundScheduler(
+        sat, gnd,
+        schedule=ContactSchedule(contact_duration_s=4.0,
+                                 contacts_per_day=8640, seed=3),
+        gate=ConfidenceGate("max_prob", SC_GATE_THRESHOLD),
+        s_per_step=1.0, horizon_s=7200.0,
+        comm_reserve_pages=FR_RESERVE_PAGES, speculative=speculative)
+    t0 = time.perf_counter()
+    rep = sg.run([r.clone() for r in trace])
+    wall = time.perf_counter() - t0
+    tokens = [rep.tokens[k] for k in sorted(rep.tokens)]
+    led = rep.ledger
+    n_esc = max(int(led.get("items_escalated")), 1)
+    esc_key = ("bytes_draft_escalated" if speculative
+               else "bytes_raw_escalated")
+    glat = [r.finished_step - r.admitted_step
+            for r in rep.ground_results.values()]
+    sat_alloc, gnd_alloc = sat.slots.allocator, gnd.slots.allocator
+    return {
+        "wall_s": round(wall, 4),
+        "n_escalated": len(rep.escalated),
+        "n_undelivered": len(rep.undelivered),
+        "bytes_escalated": round(led.get(esc_key), 1),
+        "bytes_per_escalation": round(led.get(esc_key) / n_esc, 2),
+        "ground_latency_mean_steps": round(float(np.mean(glat)), 3)
+        if glat else 0.0,
+        "pool_drained": all(a.in_use == 0 and a.reserved == 0
+                            for a in (sat_alloc, gnd_alloc)),
+        "spec": rep.spec_stats,
+        "ledger": {k: round(v, 4) for k, v in led.counters.items()},
+    }, tokens
+
+
+def _speculative_report(cfg, params):
+    """The GATE_VERSION 6 section: draft-verify in the unified step.
+
+    verify: same engine, same trace, plain decode vs perfect
+    self-drafts — token-exact, and accepted-token throughput must not
+    fall below plain decode's tokens/s (one chunk pass replaces up to
+    ``SD_DRAFT_K + 1`` decode dispatches).
+    cascade: raw-prompt vs draft-id escalation on one space-ground
+    trace — token-exact, strictly fewer bytes per escalation, and the
+    ground tier answers escalations in strictly fewer ticks."""
+    exact = lambda a, b: (len(a) == len(b)
+                          and all(np.array_equal(x, y)
+                                  for x, y in zip(a, b)))
+    _spec_verify_run(cfg, params)                  # warmup (jit)
+    plain, plain_toks = _spec_verify_run(cfg, params)
+    drafts = [np.asarray(t, np.int32) for t in plain_toks]
+    _spec_verify_run(cfg, params, drafts)          # warmup verify chunks
+    spec, spec_toks = _spec_verify_run(cfg, params, drafts)
+
+    trace = _spec_cascade_trace(cfg)
+    raw_cas, raw_toks = _serve_spec_cascade(cfg, params, trace,
+                                            speculative=False)
+    spec_cas, spec_cas_toks = _serve_spec_cascade(cfg, params, trace,
+                                                  speculative=True)
+    return {
+        "draft_k": SD_DRAFT_K,
+        "verify": {
+            "plain": plain,
+            "speculative": spec,
+            "token_exact": exact(spec_toks, plain_toks),
+            "throughput_ratio": round(spec["tokens_per_s"]
+                                      / plain["tokens_per_s"], 3),
+        },
+        "cascade": {
+            "trace": {"n_requests": SC_N_REQUESTS,
+                      "prompt_lens": list(SC_PROMPTS),
+                      "max_new": list(SC_MAX_NEW),
+                      "gate_threshold": SC_GATE_THRESHOLD},
+            "raw": raw_cas,
+            "speculative": spec_cas,
+            "token_exact_vs_raw": exact(spec_cas_toks, raw_toks),
+        },
+    }
+
+
 def run_chaos(seeds):
     """The CI chaos sweep: replay the fault section under several
     FaultPlan seeds, holding the full invariant set for each."""
@@ -815,6 +991,7 @@ def run():
     out["chunked_prefill"] = _chunked_prefill_report(cfg, params)
     out["shared_prefix"] = _shared_prefix_report(cfg, params)
     out["fault_replay"] = _fault_replay_report(cfg, params)
+    out["speculative"] = _speculative_report(cfg, params)
     out["bench_version"] = BENCH_VERSION
     rows.append(("serving_contact_window_preemptive",
                  cw["preemptive"]["wall_s"] * 1e6
@@ -861,6 +1038,19 @@ def run():
                   "prefix_hits": sp["shared"]["prefix_hits"],
                   "cow_page_copies": sp["shared"]["cow_page_copies"],
                   "token_exact": sp["token_exact"]}))
+    sd = out["speculative"]
+    rows.append(("serving_speculative",
+                 sd["verify"]["speculative"]["wall_s"] * 1e6
+                 / max(sd["verify"]["speculative"]["useful_tokens"], 1),
+                 {"throughput_ratio": sd["verify"]["throughput_ratio"],
+                  "token_exact": sd["verify"]["token_exact"],
+                  "accepted": sd["verify"]["speculative"]["accepted"],
+                  "cascade_token_exact":
+                  sd["cascade"]["token_exact_vs_raw"],
+                  "bytes_per_escalation_raw":
+                  sd["cascade"]["raw"]["bytes_per_escalation"],
+                  "bytes_per_escalation_spec":
+                  sd["cascade"]["speculative"]["bytes_per_escalation"]}))
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     with open(os.path.join(root, "BENCH_serving.json"), "w") as f:
         json.dump(out, f, indent=2, sort_keys=True)

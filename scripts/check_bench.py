@@ -40,7 +40,14 @@ Gates:
     silent acceptances, retransmitted/lost bytes metered, the framed
     byte ledger conserved, goodput efficiency bounded below by the
     injected loss, the crash survived exactly once via
-    checkpoint/restore, pools and spill store drained after.
+    checkpoint/restore, pools and spill store drained after;
+  * speculative — draft–verify decoding in the unified step: the
+    self-draft verify replay token-exact with plain decode at >= its
+    tokens/s in strictly fewer engine ticks, with every draft accepted
+    through real verify passes; the cascade replay token-exact with
+    raw escalation while shipping STRICTLY fewer bytes per escalation
+    and answering on the ground tier in strictly fewer ticks, with the
+    draft/raw byte split metered in the ledger and pools drained.
 
 Each gate prints PASS/FAIL; the exit code is non-zero if any failed.
 """
@@ -49,7 +56,7 @@ from __future__ import annotations
 import json
 import sys
 
-GATE_VERSION = 5
+GATE_VERSION = 6
 
 
 class Gates:
@@ -269,6 +276,71 @@ def check_fault_replay(g: Gates, fr: dict) -> None:
             and ref["n_undelivered"] == 0)
 
 
+def check_speculative(g: Gates, sd: dict) -> None:
+    v = sd["verify"]
+    plain, spec = v["plain"], v["speculative"]
+    # the tentpole: accepted drafts replace decode dispatches with ONE
+    # chunked verify pass per slot per tick, greedy token-exact
+    g.check("speculative verify replay token-exact vs plain decode",
+            v["token_exact"] is True)
+    g.check("accepted-token throughput >= plain decode",
+            spec["tokens_per_s"] >= plain["tokens_per_s"],
+            f"{spec['tokens_per_s']} vs {plain['tokens_per_s']}")
+    g.check("speculative run finished in fewer engine ticks",
+            spec["clock_steps"] < plain["clock_steps"],
+            f"{spec['clock_steps']} vs {plain['clock_steps']}")
+    # verification really ran (not a vacuous plain replay)...
+    g.check("verify passes observed",
+            0 < spec["verify_passes"] < spec["useful_tokens"],
+            f"n={spec['verify_passes']}")
+    # ...and the self-draft streams (the plain run's own output) are
+    # fully accepted — any rejection means verify diverges from decode
+    g.check("all self-drafts accepted",
+            spec["accepted"] == spec["drafted"] > 0,
+            f"{spec['accepted']} vs {spec['drafted']}")
+    g.check("no draft streams dropped",
+            spec["draft_streams_dropped"] == 0,
+            f"n={spec['draft_streams_dropped']}")
+    g.check("plain comparator never speculated",
+            plain["verify_passes"] == 0 and plain["drafted"] == 0)
+    g.check("verify pools drained",
+            plain["pool_drained"] is True and spec["pool_drained"] is True)
+
+    c = sd["cascade"]
+    raw, spc = c["raw"], c["speculative"]
+    g.check("cascade draft escalation token-exact vs raw escalation",
+            c["token_exact_vs_raw"] is True)
+    g.check("cascade escalation counts match and are nonzero",
+            raw["n_escalated"] == spc["n_escalated"] > 0,
+            f"{raw['n_escalated']} vs {spc['n_escalated']}")
+    # the satellite tentpole: shipping draft ids instead of re-decoding
+    # the raw prompt must strictly shrink the per-escalation downlink
+    g.check("draft bytes/escalation < raw bytes/escalation",
+            spc["bytes_per_escalation"] < raw["bytes_per_escalation"],
+            f"{spc['bytes_per_escalation']} vs "
+            f"{raw['bytes_per_escalation']}")
+    g.check("draft escalation bytes metered in ledger",
+            spc["ledger"].get("bytes_draft_escalated", 0) > 0
+            and spc["ledger"].get("draft_tokens_shipped", 0) > 0,
+            f"bytes={spc['ledger'].get('bytes_draft_escalated', 0)} "
+            f"toks={spc['ledger'].get('draft_tokens_shipped', 0)}")
+    g.check("ground tier verified drafts",
+            spc["spec"].get("verify_passes", 0) > 0
+            and spc["spec"].get("accepted", 0) > 0,
+            f"passes={spc['spec'].get('verify_passes', 0)} "
+            f"accepted={spc['spec'].get('accepted', 0)}")
+    # batched verification answers escalations faster than re-decoding
+    g.check("ground escalation latency: speculative < raw",
+            spc["ground_latency_mean_steps"]
+            < raw["ground_latency_mean_steps"],
+            f"{spc['ground_latency_mean_steps']} vs "
+            f"{raw['ground_latency_mean_steps']}")
+    g.check("no undelivered answers in either cascade replay",
+            raw["n_undelivered"] == 0 and spc["n_undelivered"] == 0)
+    g.check("cascade pools drained",
+            raw["pool_drained"] is True and spc["pool_drained"] is True)
+
+
 def main(argv) -> int:
     path = argv[1] if len(argv) > 1 else "BENCH_serving.json"
     with open(path) as f:
@@ -288,6 +360,7 @@ def main(argv) -> int:
     check_chunked_prefill(g, bench["chunked_prefill"])
     check_shared_prefix(g, bench["shared_prefix"])
     check_fault_replay(g, bench["fault_replay"])
+    check_speculative(g, bench["speculative"])
     print(f"\n{'OK' if not g.failures else 'FAILED'}: "
           f"{g.failures} gate(s) failed ({path}, gate v{GATE_VERSION})")
     return 1 if g.failures else 0

@@ -80,6 +80,13 @@ SCHEDULER = dict(
     frame_bytes=1024,                 # downlink ARQ frame size
     link_max_retries=8,               # per-frame retry budget
     checkpoint_every=64,              # onboard ticks between checkpoints
+    # speculative escalation (serving.speculative / engine draft-verify):
+    # an escalated sequence downlinks only the ONBOARD tier's draft
+    # token ids (payload_bytes_draft) and the GROUND tier verifies up to
+    # draft_k of them per slot per tick in one chunked pass — greedy
+    # token-exact with a raw re-decode at a fraction of the bytes.
+    speculative=True,
+    draft_k=8,                        # max drafts verified per pass
 )
 
 CONFIG = GROUND            # default arch when loaded via get_config

@@ -393,3 +393,12 @@ def payload_bytes_raw(n_items: int, item_shape, dtype_bytes: int = 1) -> int:
     for d in item_shape:
         n *= d
     return n_items * n * dtype_bytes
+
+
+def payload_bytes_draft(n_draft: int) -> int:
+    """Speculative escalation payload: the satellite tier's draft token
+    ids (4 bytes each) plus a small header (request reference + lengths
+    — the ground tier already holds the prompt from the uplink relay,
+    so nothing else crosses the link).  Compare ``payload_bytes_raw``,
+    which ships the whole prompt payload for a from-scratch re-decode."""
+    return 4 * n_draft + 16

@@ -325,7 +325,11 @@ def paged_prefill_attention(p: dict, cfg: ModelConfig, x, pool_k, pool_v,
     causally over the gathered page set via ``chunked_attention``'s
     ``q_offset``/``kv_len`` masking — numerically the paged decode
     path applied C positions at a time, so no contiguous prefix cache
-    (and no graft) ever exists."""
+    (and no graft) ever exists.  The per-position outputs (and hence
+    per-position logits upstream) are exact for EVERY chunk position,
+    not just the last: speculative draft-verify replays a chunk of
+    draft tokens mid-decode and reads all C next-token predictions
+    from one pass."""
     B, C, _ = x.shape
     ps = pool_k.shape[1]
     q, k, v = _project_qkv(p, cfg, x)
@@ -513,7 +517,9 @@ def mla_paged_prefill(p: dict, cfg: ModelConfig, x, pool_ckv, pool_krope,
     ``paged_prefill_attention`` for the chunk/page layout): the chunk's
     (ckv, k_rope) land in their absolute-position pages, pads on the
     scratch page, and attention runs the absorbed decode path with a
-    per-query causal mask — C positions at a time."""
+    per-query causal mask — C positions at a time, every position's
+    output exact (the speculative verify pass reads all of them, not
+    just the final chunk position)."""
     B, C, _ = x.shape
     ps = pool_ckv.shape[1]
     pos, page, off = _chunk_page_targets(pos_offset, C, n_valid, ps,

@@ -979,12 +979,19 @@ def prefill_chunk(params: dict, cfg: ModelConfig, cache: dict, tokens,
     cache: an ``init_paged_cache`` pool.  block_tables: (1, max_pages)
     int32 covering at least positions [0, pos_offset + n_valid).
 
-    Returns (logits (1, C, V), moe_overflow, new_cache).  The caller
-    takes ``logits[0, n_valid-1]`` of the final chunk as the first
-    emitted token's distribution; ``moe_overflow`` is nonzero when
-    ``moe_capacity`` dropped routings (the engine doubles and retries —
-    the same dynamic-capacity discipline as monolithic serving
-    prefill, applied per chunk)."""
+    Returns (logits (1, C, V), moe_overflow, new_cache).  The logits
+    are PER-POSITION next-token distributions — ``logits[0, i]``
+    predicts the token after ``tokens[0, i]`` given everything up to
+    ``pos_offset + i`` — and that contract is load-bearing twice over:
+    prompt admission takes ``logits[0, n_valid-1]`` of the final chunk
+    as the first emitted token's distribution, and speculative
+    draft-verify (``serving.engine.ContinuousEngine._verify_slot``)
+    runs a chunk of ``[last_token, d_1..d_k]`` mid-decode and compares
+    every position's argmax against the next draft to accept the
+    longest agreeing prefix in one pass.  ``moe_overflow`` is nonzero
+    when ``moe_capacity`` dropped routings (the engine doubles and
+    retries — the same dynamic-capacity discipline as monolithic
+    serving prefill, applied per chunk)."""
     fam = cfg.family
     if fam not in ("dense", "moe"):
         raise NotImplementedError(

@@ -54,6 +54,13 @@ class Request:
     #                                       chunk-by-chunk; preempt/resume
     #                                       continues from here, and a
     #                                       redo-from-prefill resets it)
+    draft_toks: Optional[np.ndarray] = None
+    #                                       (n,) int32 speculative draft of
+    #                                       the greedy continuation (e.g. the
+    #                                       satellite tier's answer riding a
+    #                                       ground escalation): the engine
+    #                                       verifies it in chunked passes
+    #                                       instead of decoding token-by-token
 
     def pages_needed(self, page_size: int) -> int:
         """Worst-case KV pages over the request's lifetime: the cache
@@ -65,7 +72,8 @@ class Request:
     def clone(self) -> "Request":
         """Fresh-rid copy for replaying the same workload through
         another engine (benchmark/test A-B comparisons); prefill
-        progress does not carry over."""
+        progress and any attached draft stream do not carry over —
+        drafts are delivery metadata the sender re-attaches."""
         return Request(prompt=self.prompt.copy(), max_new=self.max_new,
                        arrival_t=self.arrival_t, priority=self.priority)
 

@@ -162,7 +162,7 @@ class ServingEngine:
         if cfg.family == "vlm":
             pos = S + (extra_inputs or {}).get(
                 "patch_embeds", np.zeros((B, 0, 1))).shape[1]
-        out = np.empty((B, max_new), np.int64)
+        out = np.empty((B, max_new), np.int32)
         cur_logits = logits[:, -1]
         for t in range(max_new):
             if greedy:
@@ -217,6 +217,11 @@ class _SlotState:
     n_preemptions: int = 0
     last_logits: Optional[np.ndarray] = None   # (V,) set at admission and
     #                                            finish (confidence routing)
+    drafts: List[int] = field(default_factory=list)
+    #                                  pending speculative draft tokens: the
+    #                                  unified step verifies up to ``draft_k``
+    #                                  of them in ONE prefill-chunk pass
+    #                                  instead of stepping this slot's decode
 
 
 class _SlotOccupancy:
@@ -241,20 +246,22 @@ class _SlotOccupancy:
         return any(s is not None for s in self.states)
 
     # -- batched decode inputs --------------------------------------------
-    def decode_inputs(self):
+    def decode_inputs(self, skip=()):
         """(tokens (n_slots, 1) int32, pos (n_slots,) int32).  Inactive
-        and PREFILLING slots feed a dummy token at position 0 of a cache
-        region no live sequence reads (their own private cache row here;
-        the scratch page in the paged layout — ``block_tables`` maps
-        non-decoding rows entirely to the scratch page), leaving live
-        garbage there.  That is safe ONLY because admission rewrites
-        positions [0, prefix) before the slot is read again and
-        everything past a slot's ``kv_len`` is masked — any layout must
-        preserve this overwrite-before-read guarantee."""
+        and PREFILLING slots — and ``skip`` slots, which already took a
+        multi-token verify pass this tick — feed a dummy token at
+        position 0 of a cache region no live sequence reads (their own
+        private cache row here; the scratch page in the paged layout —
+        ``block_tables`` maps non-decoding rows entirely to the scratch
+        page), leaving live garbage there.  That is safe ONLY because
+        admission rewrites positions [0, prefix) before the slot is
+        read again and everything past a slot's ``kv_len`` is masked —
+        any layout must preserve this overwrite-before-read
+        guarantee."""
         toks = np.zeros((self.n_slots, 1), np.int32)
         pos = np.zeros((self.n_slots,), np.int32)
         for i, s in enumerate(self.states):
-            if s is not None and s.phase == DECODING:
+            if s is not None and s.phase == DECODING and i not in skip:
                 toks[i, 0] = s.next_tok
                 pos[i] = s.pos
         return toks, pos
@@ -606,33 +613,34 @@ class PagedSlotManager(_SlotOccupancy):
         self.states[slot] = state
 
     # -- paged decode plumbing ---------------------------------------------
-    def ensure_write_pages(self) -> None:
+    def ensure_write_pages(self, skip=()) -> None:
         """Grow each active slot's block table to cover its next write
         position.  Draws on the reservation made at admission, so it
         cannot fail mid-sequence.  Also lowers the slot's ``synced_pages``
         watermark to the page this tick writes into — that page now
         diverges from any host spill copy, so the next spill must ship
         it again (everything below the watermark stays delta-exempt).
-        PREFILLING slots are skipped: their pages grow chunk-by-chunk
-        through ``grow_for_chunk``.  A write landing in a shared page
+        PREFILLING slots — and ``skip`` slots, whose verify pass grew
+        its own pages through ``grow_for_chunk`` — are skipped: their
+        pages grow chunk-by-chunk.  A write landing in a shared page
         forks a private copy first (copy-on-write) — no decode write
         ever touches a page another holder can read."""
         for slot, st in enumerate(self.states):
-            if st is None or st.phase != DECODING:
+            if st is None or st.phase != DECODING or slot in skip:
                 continue
             self._fork_shared(slot, st.pos // self.page_size)
             while len(st.pages) <= st.pos // self.page_size:
                 st.pages.extend(self.allocator.alloc(1))
             st.synced_pages = min(st.synced_pages, st.pos // self.page_size)
 
-    def block_tables(self) -> np.ndarray:
+    def block_tables(self, skip=()) -> np.ndarray:
         """(n_slots, max_bt) int32 page ids for the DECODE sub-batch;
-        unused entries — and whole rows of inactive or PREFILLING slots,
-        whose dummy decode write must not touch their real pages —
-        point at the scratch page 0."""
+        unused entries — and whole rows of inactive, PREFILLING or
+        ``skip`` slots, whose dummy decode write must not touch their
+        real pages — point at the scratch page 0."""
         bt = np.zeros((self.n_slots, self.max_bt), np.int32)
         for i, st in enumerate(self.states):
-            if st is not None and st.phase == DECODING:
+            if st is not None and st.phase == DECODING and i not in skip:
                 bt[i, :len(st.pages)] = st.pages
         return bt
 
@@ -708,10 +716,25 @@ class ContinuousEngine:
     Token-exact with prefix_cache=False: cached pages hold exactly the
     KV the skipped chunks would have recomputed.
 
-    ``last_tick_prefill_tokens`` / ``last_tick_decode_tokens`` expose
-    the unified step's per-tick token accounting (prefill tokens spent;
-    decoding slots stepped) — the benchmark and the property suite
-    gate ``prefill <= budget`` and ``decode <= n_slots`` on them.
+    Speculative draft verification (paged layouts): a DECODING slot
+    holding pending draft tokens (attached via ``attach_drafts`` or a
+    ``Request.draft_toks`` stream) verifies up to ``draft_k`` of them
+    in ONE ``prefill_chunk`` pass instead of taking that tick's decode
+    step — the chunk runs ``[next_tok, d_1..d_k]`` at the slot's
+    current position, the per-position argmaxes give the longest
+    agreeing draft prefix, and the first disagreeing position's argmax
+    is the correction token, so the emitted stream is token-for-token
+    identical to plain greedy decode whatever the drafts were.
+    Rejected draft positions leave stale KV beyond the slot's
+    ``kv_len``, which the same masking that recycles pages already
+    hides — rollback is free.
+
+    ``last_tick_prefill_tokens`` / ``last_tick_decode_tokens`` /
+    ``last_tick_verify_tokens`` expose the unified step's per-tick
+    token accounting (prefill tokens spent; decoding slots stepped;
+    draft+input tokens verified) — the benchmark and the property
+    suite gate ``prefill <= budget`` and ``decode <= n_slots`` on
+    them (verify adds at most ``n_slots * (draft_k + 1)``).
     """
 
     FAMILIES = ("dense", "moe", "hybrid", "ssm")
@@ -722,12 +745,15 @@ class ContinuousEngine:
                  kv_layout: str = "auto", page_size: int = 16,
                  pool_pages: Optional[int] = None,
                  prefill_budget_tokens: Optional[int] = 64,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False, draft_k: int = 8):
         if cfg.family not in self.FAMILIES:
             raise NotImplementedError(
                 f"ContinuousEngine does not serve family {cfg.family!r}")
         if kv_layout not in ("auto", "paged", "contiguous"):
             raise ValueError(f"unknown kv_layout {kv_layout!r}")
+        if draft_k < 1:
+            raise ValueError("draft_k must be >= 1 (max draft tokens "
+                             "verified per slot per tick)")
         if kv_layout == "auto":
             kv_layout = ("paged" if cfg.family in self.PAGED_FAMILIES
                          else "contiguous")
@@ -760,14 +786,22 @@ class ContinuousEngine:
                 lambda p, c, t, pos: T.decode_step(p, cfg, c, t, pos)))
         self.queue = RequestQueue(max_batch=n_slots,
                                   capacity=queue_capacity)
+        self.draft_k = draft_k
         self.clock = 0                        # unified-step ticks
         self.finish_order: List[int] = []
         self.results: Dict[int, RequestResult] = {}
         self.last_tick_prefill_tokens = 0
         self.last_tick_decode_tokens = 0
+        self.last_tick_verify_tokens = 0
         self.prefill_tokens_total = 0         # prompt tokens actually run
         #                                       (prefix-cache hits charge 0)
+        self.spec_verify_passes = 0           # one-chunk draft verifications
+        self.spec_drafted_total = 0           # draft tokens verified
+        self.spec_accepted_total = 0          # draft tokens accepted
+        self.spec_draft_streams_dropped = 0   # streams whose first draft
+        #                                       disagreed with the prefill
         self._spent_this_tick = 0
+        self._verify_this_tick = 0
         self._tick_budget_left = self._budget()
         self._prefill = _cached_jit(("cont_prefill", cfg), lambda: jax.jit(
             lambda p, t, cap: T.forward(p, cfg, {"tokens": t},
@@ -784,7 +818,8 @@ class ContinuousEngine:
         kw = dict(n_slots=self.slots.n_slots, max_seq=self.max_seq,
                   queue_capacity=self.queue.capacity,
                   kv_layout=self.kv_layout,
-                  prefill_budget_tokens=self.prefill_budget_tokens)
+                  prefill_budget_tokens=self.prefill_budget_tokens,
+                  draft_k=self.draft_k)
         if self.kv_layout == "paged":
             kw.update(page_size=self.slots.page_size,
                       pool_pages=self.slots.allocator.n_pages,
@@ -816,6 +851,13 @@ class ContinuousEngine:
                 f"request {req.rid}: needs more KV pages than the whole "
                 f"pool ({self.slots.allocator.n_pages} x "
                 f"{self.slots.page_size}) — raise pool_pages")
+        if req.draft_toks is not None:
+            d = np.asarray(req.draft_toks)
+            if d.ndim != 1:
+                raise ValueError(
+                    f"request {req.rid}: draft_toks must be 1-D token ids, "
+                    f"got shape {d.shape}")
+            req.draft_toks = d.astype(np.int32)
         return self.queue.submit(req)
 
     def _bucket_len(self, S: int) -> int:
@@ -920,12 +962,111 @@ class ContinuousEngine:
                 self.slots.note_prefill_complete(slot)
                 if len(st.emitted) >= req.max_new:
                     self._finish(slot)
+                elif req.draft_toks is not None and len(req.draft_toks):
+                    # a draft stream rides the request (the satellite
+                    # tier's answer): its head must reproduce the
+                    # prefill token or the whole stream is stale
+                    if int(req.draft_toks[0]) == first:
+                        self.attach_drafts(slot, req.draft_toks[1:])
+                    else:
+                        self.spec_draft_streams_dropped += 1
+
+    # -- speculative draft verification (paged layout) ----------------------
+    def attach_drafts(self, slot: int, draft_toks) -> int:
+        """Queue draft tokens on a DECODING slot for one-pass
+        verification by the unified step.  Clamped so drafts that could
+        never be emitted (the slot needs one free position for the
+        correction/bonus token) are dropped HERE, before any verify
+        pass runs or any ledger meters them.  Returns the number
+        actually queued (0 under the contiguous layout, which has no
+        chunk machinery to verify through — plain decode proceeds)."""
+        st = self.slots.states[slot]
+        if st is None or st.phase != DECODING:
+            raise RuntimeError(
+                f"slot {slot}: drafts need a DECODING occupant")
+        if self.kv_layout != "paged":
+            return 0
+        rem = st.request.max_new - len(st.emitted)
+        take = max(0, min(len(draft_toks), rem - 1 - len(st.drafts)))
+        st.drafts.extend(int(t) for t in draft_toks[:take])
+        return take
+
+    def _verify_slot(self, slot: int) -> bool:
+        """Verify up to ``draft_k`` of the slot's pending draft tokens
+        in ONE prefill-chunk pass: run ``[next_tok, d_1..d_k]`` at the
+        slot's current position (their KV lands in pages drawn from the
+        admission reservation, exactly like a prompt chunk), accept the
+        longest prefix of drafts agreeing with the per-position
+        argmaxes and emit the first disagreeing position's argmax as
+        the correction (or bonus) token — token-for-token identical to
+        ``n_ok + 1`` plain greedy decode steps.  KV written for
+        rejected positions sits beyond the slot's new ``kv_len`` and is
+        masked until overwritten, so no rollback copy is needed.
+        Returns False when there is no room left to speculate (the
+        drafts are dropped and plain decode emits the final token)."""
+        st = self.slots.states[slot]
+        req = st.request
+        rem = req.max_new - len(st.emitted)
+        k = min(len(st.drafts), self.draft_k, rem - 1)
+        if k <= 0:
+            st.drafts = []
+            return False
+        C = k + 1
+        Cb = self._chunk_bucket(C)
+        toks = np.zeros((1, Cb), np.int32)
+        toks[0, 0] = st.next_tok
+        toks[0, 1:C] = st.drafts[:k]
+        self.slots.grow_for_chunk(slot, st.pos + C)
+        logits, self.slots.cache = self._run_chunk(
+            toks, C, st.pos, self.slots.chunk_block_table(slot))
+        preds = np.asarray(jnp.argmax(logits[0, :C], -1))
+        n_ok = 0
+        while n_ok < k and int(preds[n_ok]) == st.drafts[n_ok]:
+            n_ok += 1
+        out = st.drafts[:n_ok] + [int(preds[n_ok])]
+        rest = st.drafts[k:]
+        # leftover drafts (stream longer than draft_k) survive only a
+        # full acceptance whose bonus token matches their head — any
+        # disagreement makes the rest of the stream stale
+        st.drafts = (rest[1:] if n_ok == k and rest and rest[0] == out[-1]
+                     else [])
+        st.emitted.extend(out)
+        st.pos += n_ok + 1
+        st.next_tok = out[-1]
+        self.spec_verify_passes += 1
+        self.spec_drafted_total += k
+        self.spec_accepted_total += n_ok
+        self._verify_this_tick += C
+        if len(st.emitted) >= req.max_new:
+            st.last_logits = np.asarray(logits[0, n_ok], np.float32)
+            self._finish(slot)
+        return True
+
+    def _verify_pending(self) -> set:
+        """Run the draft-verify pass for every DECODING slot holding
+        pending drafts; returns the slots that advanced (they sit out
+        this tick's batched decode — their tokens already landed)."""
+        verified = set()
+        if self.kv_layout != "paged":
+            return verified
+        for slot in self.slots.decoding_slots():
+            if self.slots.states[slot].drafts and self._verify_slot(slot):
+                verified.add(slot)
+        return verified
+
+    def spec_stats(self) -> dict:
+        """Speculative-verification counters (cumulative)."""
+        return {"draft_k": self.draft_k,
+                "verify_passes": self.spec_verify_passes,
+                "drafted": self.spec_drafted_total,
+                "accepted": self.spec_accepted_total,
+                "draft_streams_dropped": self.spec_draft_streams_dropped}
 
     def _finish(self, slot: int) -> None:
         st = self.slots.states[slot]
         req = st.request
         self.results[req.rid] = RequestResult(
-            rid=req.rid, tokens=np.asarray(st.emitted, np.int64),
+            rid=req.rid, tokens=np.asarray(st.emitted, np.int32),
             prompt_len=len(req.prompt), admitted_step=st.admitted_step,
             finished_step=self.clock, first_token_step=st.first_token_step,
             n_preemptions=st.n_preemptions,
@@ -956,8 +1097,10 @@ class ContinuousEngine:
     def _end_tick(self) -> None:
         """Close the tick's token accounting and open the next budget."""
         self.last_tick_prefill_tokens = self._spent_this_tick
+        self.last_tick_verify_tokens = self._verify_this_tick
         self.clock += 1
         self._spent_this_tick = 0
+        self._verify_this_tick = 0
         self._tick_budget_left = self._budget()
 
     def _idle_tick(self) -> None:
@@ -967,20 +1110,21 @@ class ContinuousEngine:
         self.last_tick_decode_tokens = 0
         self._end_tick()
 
-    def _decode_batch(self) -> None:
+    def _decode_batch(self, skip=frozenset()) -> None:
         """ONE batched decode step over every DECODING slot (PREFILLING
-        and empty slots ride along masked to the scratch region) and
-        evict finished sequences."""
-        decoding = self.slots.decoding_slots()
+        and empty slots — and ``skip`` slots, already advanced by this
+        tick's verify pass — ride along masked to the scratch region)
+        and evict finished sequences."""
+        decoding = [s for s in self.slots.decoding_slots() if s not in skip]
         self.last_tick_decode_tokens = len(decoding)
         if not decoding:
             return
-        toks, pos = self.slots.decode_inputs()
+        toks, pos = self.slots.decode_inputs(skip)
         if self.kv_layout == "paged":
-            self.slots.ensure_write_pages()
+            self.slots.ensure_write_pages(skip)
             logits, self.slots.cache = self._decode(
                 self.params, self.slots.cache, jnp.asarray(toks),
-                jnp.asarray(pos), jnp.asarray(self.slots.block_tables()))
+                jnp.asarray(pos), jnp.asarray(self.slots.block_tables(skip)))
         else:
             logits, self.slots.cache = self._decode(
                 self.params, self.slots.cache, jnp.asarray(toks),
@@ -1002,9 +1146,12 @@ class ContinuousEngine:
         """ONE unified token-budget tick: spend what remains of the
         tick's ``prefill_budget_tokens`` across PREFILLING slots (FIFO
         by admission — admission itself already draws on the same
-        allowance), then run one batched decode step over the DECODING
-        slots.  Total model work this tick is therefore bounded by
-        ``prefill_budget_tokens + n_slots`` tokens, whatever arrives."""
+        allowance), verify pending draft tokens (one chunk pass per
+        drafted slot, up to ``draft_k + 1`` tokens each), then run one
+        batched decode step over the remaining DECODING slots.  Total
+        model work this tick is therefore bounded by
+        ``prefill_budget_tokens + n_slots * (draft_k + 1)`` tokens,
+        whatever arrives."""
         if not self.slots.any_active():
             self._idle_tick()                 # wait for arrivals
             return
@@ -1012,7 +1159,8 @@ class ContinuousEngine:
             if self._tick_budget_left <= 0:
                 break
             self._pump_prefill(slot)
-        self._decode_batch()
+        verified = self._verify_pending()
+        self._decode_batch(skip=verified)
         self._end_tick()
 
     def step(self) -> List[int]:

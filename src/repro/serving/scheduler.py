@@ -68,7 +68,7 @@ from repro.core.energy import EnergyModel
 from repro.core.faults import FaultInjector
 from repro.core.gating import ConfidenceGate
 from repro.core.link import ContactSchedule, TransmitLane, \
-    payload_bytes_raw, payload_bytes_result
+    payload_bytes_draft, payload_bytes_raw, payload_bytes_result
 from repro.core.telemetry import Ledger
 from repro.serving.batching import Request, ensure_rid_floor
 from repro.serving.engine import ContinuousEngine, RequestResult, \
@@ -536,6 +536,7 @@ class PreemptiveScheduler:
                 "n_preemptions": int(st.n_preemptions),
                 "preempted_step": int(preempted_step),
                 "n_kv_leaves": n,
+                "drafts": [int(x) for x in st.drafts],
             })
 
         # swapped entries first: materializing a store-managed spill can
@@ -671,7 +672,8 @@ class PreemptiveScheduler:
                           first_token_step=int(s["first_token_step"]),
                           phase=s["phase"],
                           n_preemptions=int(s["n_preemptions"]),
-                          last_logits=leaves.get(f"logits/{rid}"))
+                          last_logits=leaves.get(f"logits/{rid}"),
+                          drafts=[int(x) for x in s.get("drafts", [])])
             if paged:
                 # shared-prefix refs died with the old pool: the restored
                 # entry is fully private, budgeted for its whole lifetime
@@ -711,6 +713,8 @@ class SpaceGroundReport:
     decode_steps_in_window: int = 0     # overlap: decode ticks during passes
     n_reboots: int = 0                  # injected crashes survived via restore
     lane_stats: dict = field(default_factory=dict)  # TransmitLane.state()
+    spec_stats: dict = field(default_factory=dict)  # ground-tier draft-verify
+    #                                     counters (ContinuousEngine.spec_stats)
 
 
 class SpaceGroundScheduler:
@@ -724,7 +728,15 @@ class SpaceGroundScheduler:
         budget, in FIFO order: (a) compact results of confident finished
         sequences, (b) raw prompts of low-confidence ones — the
         ``core/cascade`` gate decides which — which the ground engine
-        then re-answers; and
+        then re-answers.  With ``speculative=True`` an escalation ships
+        only the satellite's DRAFT TOKEN IDS
+        (``core.link.payload_bytes_draft`` — the ground already holds
+        the prompt from the uplink relay, exactly as the raw path
+        already assumes when it resubmits ``by_rid[rid]``) and the
+        ground engine verifies the whole draft stream in chunked
+        passes (``ContinuousEngine.attach_drafts``) instead of
+        re-decoding token-by-token — same greedy answers, a fraction
+        of the downlink bytes and of the ground decode ticks; and
       * a **compute lane**: with ``overlap`` (the default) satellite
         decode *continues through the pass*, interleaved one decode
         step per transmitted tick.  Only the transmit lane's staging
@@ -759,7 +771,8 @@ class SpaceGroundScheduler:
                  link_max_retries: int = 8,
                  faults: Optional[FaultInjector] = None,
                  checkpoint_every: int = 0,
-                 checkpoint_path: Optional[str] = None):
+                 checkpoint_path: Optional[str] = None,
+                 speculative: bool = False):
         self._sat_kw = dict(preempt_mode=preempt_mode,
                             delta_spill=delta_spill)
         self.faults = faults
@@ -768,6 +781,11 @@ class SpaceGroundScheduler:
         self.overlap = overlap
         self.comm_reserve_pages = comm_reserve_pages
         self.ground = ground_engine
+        self.speculative = speculative
+        if speculative and ground_engine.kv_layout != "paged":
+            raise ValueError(
+                "speculative escalation needs a paged-layout ground "
+                "engine (draft verification runs through the chunk path)")
         # fresh default instances per scheduler: the models hold mutable
         # dict fields a caller may tune (e.g. energy.subsystem_w)
         self.schedule = schedule if schedule is not None else ContactSchedule()
@@ -872,16 +890,26 @@ class SpaceGroundScheduler:
             rep.sat_results[rid] = res
             dec = self.gate.decide(res.logits_last[None])
             esc = bool(np.asarray(dec["escalate"])[0])
-            if esc:
-                nbytes = payload_bytes_raw(1, (res.prompt_len,), 4)
-            else:
+            if not esc:
                 nbytes = payload_bytes_result(len(res.tokens))
+            elif self.speculative:
+                # the ground tier verifies the satellite's draft instead
+                # of re-decoding from the (already-relayed) raw prompt:
+                # only the draft token ids cross the downlink
+                nbytes = payload_bytes_draft(len(res.tokens))
+            else:
+                nbytes = payload_bytes_raw(1, (res.prompt_len,), 4)
             if rid not in classified:    # a post-reboot redo re-finishes
                 classified.add(rid)
                 led.add("items_total", 1)
                 led.add("items_escalated", int(esc))
                 led.add("bytes_results", 0 if esc else nbytes)
-                led.add("bytes_raw_escalated", nbytes if esc else 0)
+                if self.speculative:
+                    led.add("bytes_draft_escalated", nbytes if esc else 0)
+                    led.add("draft_tokens_shipped",
+                            len(res.tokens) if esc else 0)
+                else:
+                    led.add("bytes_raw_escalated", nbytes if esc else 0)
                 led.add("bytes_bentpipe_baseline",
                         payload_bytes_raw(1, (res.prompt_len,), 4))
             lane.enqueue((rid, esc), nbytes)
@@ -952,6 +980,12 @@ class SpaceGroundScheduler:
                         # downlink order (not a flat 0.0 for everyone)
                         g = src.clone()
                         g.arrival_t = float(self.ground.clock)
+                        if self.speculative:
+                            # the landed payload IS the draft stream:
+                            # the ground verifies it in chunked passes
+                            # rather than re-decoding the prompt
+                            g.draft_toks = np.asarray(
+                                rep.sat_results[rid].tokens, np.int32)
                         ground_to_rid[g.rid] = rid
                         self.ground.submit(g)
                 # a payload that burned its whole retry budget goes back
@@ -1015,4 +1049,6 @@ class SpaceGroundScheduler:
         rep.n_preemptions = self.sat.n_preemptions
         rep.sat_stats = self.sat.stats()
         rep.lane_stats = lane.state()
+        if self.speculative:
+            rep.spec_stats = self.ground.spec_stats()
         return rep

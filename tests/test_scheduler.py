@@ -891,6 +891,46 @@ def test_escalated_requests_carry_downlink_arrival(cfg, params):
     _assert_drained(sg.ground)
 
 
+def test_speculative_escalation_ships_drafts_token_exactly(cfg, params):
+    """``speculative=True`` reroutes escalations through draft-id
+    downlinks + ground-side batched verification: same final tokens as
+    the raw re-decode path on the same trace, strictly fewer escalated
+    bytes, and the draft/raw ledger split kept distinct.  Prompts dwarf
+    the answers (the deployment shape) — a raw escalation re-uplinks
+    the prompt's bytes, a draft escalation ships only the answer's."""
+    rng = np.random.default_rng(8)
+    trace = [Request(prompt=_prompt(rng, int(rng.integers(24, 40)),
+                                    cfg.vocab_size),
+                     max_new=int(rng.integers(4, 8)),
+                     arrival_t=float(i * 2)) for i in range(4)]
+    raw = _sg_setup(cfg, params, threshold=2.0)     # escalate everything
+    rep_raw = raw.run([r.clone() for r in trace])
+    spec = _sg_setup(cfg, params, threshold=2.0, speculative=True)
+    rep_spec = spec.run([r.clone() for r in trace])
+
+    assert len(rep_spec.escalated) == len(rep_raw.escalated) == len(trace)
+    # clone() assigns fresh rids: compare streams in admission order
+    for a, b in zip([rep_spec.tokens[r] for r in sorted(rep_spec.tokens)],
+                    [rep_raw.tokens[r] for r in sorted(rep_raw.tokens)]):
+        np.testing.assert_array_equal(a, b)
+    led_s, led_r = rep_spec.ledger, rep_raw.ledger
+    assert 0 < led_s.get("bytes_draft_escalated") \
+        < led_r.get("bytes_raw_escalated")
+    assert led_s.get("draft_tokens_shipped") > 0
+    assert led_s.get("bytes_raw_escalated") == 0
+    assert led_r.get("bytes_draft_escalated") == 0
+    # same tiers draft and verify, so the ground engine accepts every
+    # shipped draft through real verify passes
+    st = rep_spec.spec_stats
+    assert st["verify_passes"] > 0
+    assert st["drafted"] == st["accepted"] > 0
+    assert st["draft_streams_dropped"] == 0
+    assert rep_raw.spec_stats == {}
+    for sg in (raw, spec):
+        _assert_drained(sg.sat.engine)
+        _assert_drained(sg.ground)
+
+
 def test_stats_schema_matches_store_with_and_without_spill(cfg, params):
     """The no-store stats dict is derived from DeltaSpillStore's own
     schema (empty_stats), so the two paths can never drift apart — any

@@ -1,19 +1,224 @@
-"""Speculative collaborative decoding: provable equality with the ground
-tier's greedy output + acceptance accounting."""
+"""Speculative draft-verify decoding: provable equality with the ground
+tier's greedy output, one-pass engine verification, and acceptance /
+uplink accounting.
+
+The fast tests run on UNTRAINED fp32 params — greedy exactness is a
+property of the verify algebra (argmax agreement over one chunk pass),
+not of trained weights.  Only the agreement-RATE tests at the bottom
+need the trained pair and stay slow-marked.
+"""
+import jax
 import numpy as np
 import pytest
 
 from repro.configs import tiansuan_pair as TP
-from repro.data.tokens import TokenStream, TokenStreamConfig
-from repro.serving.speculative import (greedy_generate, speculative_generate)
-from repro.training import optim
-from repro.training.loop import init_state, train
+from repro.models import transformer as T
+from repro.serving.batching import Request
+from repro.serving.engine import ContinuousEngine
+from repro.serving.speculative import (SpeculativeDecoder, greedy_generate,
+                                       speculative_generate)
 
-pytestmark = pytest.mark.slow   # trains the draft/target pair
+MAX_SEQ = 64
 
 
 @pytest.fixture(scope="module")
+def pair_cfgs():
+    onboard = TP.ONBOARD.with_(param_dtype="float32",
+                               activation_dtype="float32")
+    ground = TP.GROUND.with_(param_dtype="float32",
+                             activation_dtype="float32")
+    return onboard, ground
+
+
+@pytest.fixture(scope="module")
+def pair_params(pair_cfgs):
+    onboard, ground = pair_cfgs
+    return (T.init_params(jax.random.PRNGKey(0), onboard, max_seq=MAX_SEQ),
+            T.init_params(jax.random.PRNGKey(1), ground, max_seq=MAX_SEQ))
+
+
+def _prompt(cfg, S, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(1, cfg.vocab_size, S).astype(np.int32)
+
+
+def _assert_drained(eng):
+    alloc = eng.slots.allocator
+    assert alloc.in_use == 0
+    assert alloc.reserved == 0
+
+
+# -- greedy exactness (the tentpole contract) ------------------------------
+
+def test_speculative_matches_greedy_cross_model(pair_cfgs, pair_params):
+    """Untrained tiers disagree on almost every draft; the output must
+    STILL equal plain greedy decoding of the target tier alone."""
+    (dcfg, tcfg), (dparams, tparams) = pair_cfgs, pair_params
+    prompt = _prompt(tcfg, 16, seed=3)
+    want = greedy_generate(tparams, tcfg, prompt, max_new=12)
+    got = speculative_generate(dparams, dcfg, tparams, tcfg, prompt,
+                               max_new=12, k=4)
+    np.testing.assert_array_equal(got.tokens, want)
+    assert got.tokens.dtype == np.int32
+    assert want.dtype == np.int32
+    assert got.rounds <= 12                  # never worse than greedy
+    assert 0.0 <= got.acceptance_rate <= 1.0
+    assert got.ledger.get("tokens_produced") == 12
+
+
+def test_self_draft_truncation_accounting(pair_cfgs, pair_params):
+    """Regression for the metering bug this PR fixes: with the SAME
+    model drafting and verifying, every draft is accepted — and with
+    ``max_new % (k+1) != 0`` the final round must DRAFT fewer tokens
+    rather than draft ahead and truncate, so accepted == drafted and
+    the uplink ledger only ever meters shipped ids.
+
+    max_new=9, k=4: the engine emits 2 tokens at prefill (prefill token
+    + same-tick decode), then rounds of k_eff = min(4, rem-1) drafts:
+    4 drafted (5 emitted) then 1 drafted (2 emitted) — 5 drafted total,
+    uplink (4*4+16) + (4*1+16) = 52 bytes, never 8 drafts for 7 slots.
+    """
+    (dcfg, _), (dparams, _) = pair_cfgs, pair_params
+    prompt = _prompt(dcfg, 12, seed=7)
+    want = greedy_generate(dparams, dcfg, prompt, max_new=9)
+    got = speculative_generate(dparams, dcfg, dparams, dcfg, prompt,
+                               max_new=9, k=4)
+    np.testing.assert_array_equal(got.tokens, want)
+    assert got.rounds == 2
+    assert got.drafted == got.accepted == 5
+    assert got.acceptance_rate == 1.0
+    assert got.ledger.get("uplink_bytes") == 52
+    assert got.ledger.get("tokens_produced") == 9
+
+
+# -- the engine's one-pass k-token verify ----------------------------------
+
+def _engine(cfg, params, **kw):
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("max_seq", MAX_SEQ)
+    kw.setdefault("draft_k", 8)
+    return ContinuousEngine(cfg, params, **kw)
+
+
+def _plain_tokens(cfg, params, reqs):
+    eng = _engine(cfg, params)
+    res = eng.run([r.clone() for r in reqs])
+    return [np.asarray(res[k].tokens, np.int32)
+            for k in sorted(res)], eng.clock
+
+
+def test_engine_verifies_k_drafts_in_one_pass(pair_cfgs, pair_params):
+    """Requests carrying their own plain-run output as a draft stream
+    replay token-exactly with every draft accepted through chunked
+    verify passes — in strictly fewer engine ticks than plain decode."""
+    (cfg, _), (params, _) = pair_cfgs, pair_params
+    reqs = [Request(prompt=_prompt(cfg, S, seed=S), max_new=16)
+            for S in (8, 11, 14)]
+    plain, plain_clock = _plain_tokens(cfg, params, reqs)
+
+    eng = _engine(cfg, params)
+    spec_reqs = [r.clone() for r in reqs]
+    for r, toks in zip(spec_reqs, plain):
+        r.draft_toks = toks
+    res = eng.run(spec_reqs)
+    got = [np.asarray(res[k].tokens, np.int32) for k in sorted(res)]
+    for a, b in zip(got, plain):
+        np.testing.assert_array_equal(a, b)
+    st = eng.spec_stats()
+    # max_new=16: 2 tokens at prefill, then 14 verified through passes
+    # of up to draft_k+1 emitted tokens each — at least ceil(14/9) = 2
+    # passes per request, and every self-draft accepted
+    assert st["verify_passes"] >= 2 * len(reqs)
+    assert st["drafted"] == st["accepted"] > 0
+    assert st["draft_streams_dropped"] == 0
+    assert eng.clock < plain_clock
+    _assert_drained(eng)
+
+
+def test_engine_verify_survives_corrupted_draft_tail(pair_cfgs,
+                                                     pair_params):
+    """A wrong token mid-stream costs acceptance (everything after the
+    first disagreement is rejected) but never correctness."""
+    (cfg, _), (params, _) = pair_cfgs, pair_params
+    reqs = [Request(prompt=_prompt(cfg, 10, seed=21), max_new=12)]
+    (plain,), _ = _plain_tokens(cfg, params, reqs)
+
+    bad = plain.copy()
+    bad[5] = (bad[5] + 1) % cfg.vocab_size
+    eng = _engine(cfg, params)
+    res = eng.run([Request(prompt=reqs[0].prompt.copy(), max_new=12,
+                           draft_toks=bad)])
+    (result,) = res.values()
+    np.testing.assert_array_equal(result.tokens, plain)
+    st = eng.spec_stats()
+    assert 0 < st["accepted"] < st["drafted"]
+    _assert_drained(eng)
+
+
+def test_engine_drops_mismatched_draft_head(pair_cfgs, pair_params):
+    """``draft_toks[0]`` must equal the prefill's own first token — a
+    mismatched head means the stream was drafted off a different prefix
+    and the whole stream is dropped (counted, never verified)."""
+    (cfg, _), (params, _) = pair_cfgs, pair_params
+    reqs = [Request(prompt=_prompt(cfg, 10, seed=33), max_new=8)]
+    (plain,), _ = _plain_tokens(cfg, params, reqs)
+
+    bad = plain.copy()
+    bad[0] = (bad[0] + 1) % cfg.vocab_size
+    eng = _engine(cfg, params)
+    res = eng.run([Request(prompt=reqs[0].prompt.copy(), max_new=8,
+                           draft_toks=bad)])
+    (result,) = res.values()
+    np.testing.assert_array_equal(result.tokens, plain)
+    st = eng.spec_stats()
+    assert st["draft_streams_dropped"] == 1
+    assert st["verify_passes"] == 0
+    _assert_drained(eng)
+
+
+# -- validation (must hold under ``python -O``: real raises, not asserts) --
+
+def test_rejects_batched_prompt(pair_cfgs, pair_params):
+    (dcfg, tcfg), (dparams, tparams) = pair_cfgs, pair_params
+    batched = _prompt(tcfg, 8)[None, :]
+    with pytest.raises(ValueError, match="single"):
+        greedy_generate(tparams, tcfg, batched, max_new=4)
+    with pytest.raises(ValueError, match="single"):
+        speculative_generate(dparams, dcfg, tparams, tcfg, batched,
+                             max_new=4)
+
+
+def test_rejects_bad_k_and_draft_budgets(pair_cfgs, pair_params):
+    (dcfg, tcfg), (dparams, tparams) = pair_cfgs, pair_params
+    prompt = _prompt(tcfg, 8)
+    with pytest.raises(ValueError, match="k must be"):
+        speculative_generate(dparams, dcfg, tparams, tcfg, prompt, k=0)
+    with pytest.raises(ValueError, match="draft_k"):
+        _engine(tcfg, tparams, draft_k=0)
+    # a decoder whose k exceeds the target engine's per-pass budget
+    # would need multiple verify passes per round — rejected up front
+    drf = _engine(dcfg, dparams, n_slots=1)
+    tgt = _engine(tcfg, tparams, n_slots=1, draft_k=2)
+    with pytest.raises(ValueError, match="exceeds"):
+        SpeculativeDecoder(drf, tgt, k=4)
+
+
+def test_rejects_batched_draft_stream(pair_cfgs, pair_params):
+    (cfg, _), (params, _) = pair_cfgs, pair_params
+    eng = _engine(cfg, params)
+    with pytest.raises(ValueError, match="draft_toks"):
+        eng.submit(Request(prompt=_prompt(cfg, 8), max_new=4,
+                           draft_toks=np.zeros((2, 3), np.int32)))
+
+
+# -- trained pair: agreement rate (slow — trains draft/target) -------------
+
+@pytest.fixture(scope="module")
 def pair():
+    from repro.data.tokens import TokenStream, TokenStreamConfig
+    from repro.training import optim
+    from repro.training.loop import init_state, train
+
     stream = TokenStream(TokenStreamConfig(vocab_size=TP.ONBOARD.vocab_size,
                                            seq_len=96, batch_size=8))
     out = {}
@@ -27,6 +232,7 @@ def pair():
     return out
 
 
+@pytest.mark.slow
 def test_speculative_matches_target_greedy(pair):
     dcfg, dparams = pair["draft"]
     tcfg, tparams = pair["target"]
@@ -40,6 +246,7 @@ def test_speculative_matches_target_greedy(pair):
     assert got.ledger.get("tokens_produced") == 12
 
 
+@pytest.mark.slow
 def test_speculative_saves_rounds_when_tiers_agree(pair):
     """Trained on the same stream, the tiers agree often enough that
     verify rounds < tokens produced (the communication win)."""
