@@ -97,6 +97,21 @@ draft escalation ships STRICTLY fewer bytes per escalation than the
 raw path on the same trace, the ground tier answers escalations in
 strictly fewer ticks, and all pools drain.
 
+The CONSTELLATION section (``constellation``) replays one trace — all
+of it uplinked through a window-poor satellite — across K=3 satellites
+and 2 ground stations twice: the ``ContactPlanner``'s priority-to-value
+pass assignment with token-exact inter-satellite handover
+(``serving.constellation``) vs the K-independent-pairs comparator
+(static home stations, no coordination) on the SAME window sets and
+energy model.  CI gates (GATE_VERSION 7): the pooled replay's goodput
+is >= the independent pairs' at equal energy/byte budget (both within
+the per-satellite bus cap, no extra downlink payload bytes), handovers
+actually happened, every answer is token-exact with a solo replay of
+the same requests, and every pool, spill store and lane drains.
+``--chaos-constellation SEED...`` reruns the pooled replay under a
+lossy/corrupting fault plan per seed (the CI chaos step's
+constellation lane).
+
 The gates live in ``scripts/check_bench.py`` (run it locally after the
 benchmark: ``python scripts/check_bench.py BENCH_serving.json``).
 
@@ -121,7 +136,7 @@ CW_PERIOD = 40              # decode ticks between window opens
 CW_DURATION = 8             # ticks per window (gap > max max_new so the
                             # restart baseline cannot livelock)
 CW_MAX_STEPS = 20_000       # replay safety valve
-BENCH_VERSION = 6           # bumped when gated keys change (check_bench)
+BENCH_VERSION = 7           # bumped when gated keys change (check_bench)
 
 # overlap replay: denser passes (so long sequences straddle several and
 # re-preemption exercises the KV-delta format) + a staging reserve that
@@ -206,6 +221,33 @@ SC_PROMPTS = (24, 40)       # prompts longer than answers: the raw
 SC_MAX_NEW = (6, 12)        # escalation payload dwarfs the draft ids
 SC_GATE_THRESHOLD = 0.9     # escalate (nearly) everything: the section
                             # is about the escalated path's cost
+
+# constellation replay: K=3 satellites on one shared tick clock, M=2
+# ground stations, ALL load uplinked via satellite 0 — whose plane sees
+# its home station once (~t=189 of the 600 s horizon at these
+# densities) while its peers get a pass every minute or two.  The value
+# planner + handover move satellite 0's backlog over the ISL and
+# deliver inside the peers' early passes; the static independent-pairs
+# comparator parks every answer until the lone home-station pass.
+CN_N_SATS = 3
+CN_N_STATIONS = 2
+CN_N_REQUESTS = 8
+CN_PROMPTS = (6, 12)
+CN_MAX_NEW = (4, 10)
+CN_HORIZON_S = 600.0
+CN_CONTACT_DURATION_S = 6.0
+CN_CONTACTS_PER_DAY = (144, 2400, 2400)
+CN_SCHEDULE_SEED = 3
+CN_MARGIN_TICKS = 16        # peer's pass must beat the owner's by this
+CN_SLOTS = 2
+CN_PAGE_SIZE = 8
+CN_POOL_PAGES = 12
+CN_FRAME_BYTES = 256        # chaos lane: framed ARQ on downlink + ISL
+CN_MAX_RETRIES = 6
+CN_FRAME_LOSS = 0.2
+CN_FRAME_CORRUPT = 0.15
+CN_SPILL_CORRUPT_EVERY = 3
+CN_FAULT_SEED = 11          # the CI chaos step's constellation seed
 
 
 def _make_engine_inputs():
@@ -896,6 +938,199 @@ def _speculative_report(cfg, params):
     }
 
 
+def _constellation_trace(cfg):
+    from repro.serving.batching import Request
+
+    rng = np.random.default_rng(9)
+    return [Request(
+        prompt=rng.integers(1, cfg.vocab_size,
+                            int(rng.integers(*CN_PROMPTS))).astype(np.int32),
+        max_new=int(rng.integers(CN_MAX_NEW[0], CN_MAX_NEW[1] + 1)),
+        arrival_t=float(i)) for i in range(CN_N_REQUESTS)]
+
+
+def _constellation_engine(cfg, params):
+    from repro.serving.engine import ContinuousEngine
+
+    return ContinuousEngine(cfg, params, n_slots=CN_SLOTS, max_seq=MAX_SEQ,
+                            kv_layout="paged", page_size=CN_PAGE_SIZE,
+                            pool_pages=CN_POOL_PAGES,
+                            prefill_budget_tokens=16)
+
+
+def _constellation_reference(cfg, params, trace):
+    """Solo comparator: the same requests through ONE unconstrained
+    engine — the token streams every constellation replay (with or
+    without handovers) must reproduce exactly."""
+    from repro.serving.scheduler import PreemptiveScheduler
+
+    sched = PreemptiveScheduler(_constellation_engine(cfg, params))
+    for r in trace:
+        sched.submit(r.clone())
+    while sched.has_work():
+        sched.step()
+    return [np.asarray(sched.results[k].tokens)
+            for k in sorted(sched.results)]
+
+
+def _serve_constellation(cfg, params, trace, *, policy, handover,
+                         fault_seed=None):
+    """One constellation replay of ``trace`` (every request uplinked
+    via the window-poor satellite 0).  ``policy="static",
+    handover=False`` is the K-independent-pairs comparator;
+    ``fault_seed`` arms a lossy/corrupting fault plan on every framed
+    lane (the chaos sweep).  Returns (summary, tokens in rid order)."""
+    from repro.core.faults import FaultInjector, FaultPlan
+    from repro.core.link import ContactSchedule
+    from repro.serving.constellation import ConstellationScheduler
+
+    engines = [_constellation_engine(cfg, params)
+               for _ in range(CN_N_SATS)]
+    ws = ContactSchedule(contact_duration_s=CN_CONTACT_DURATION_S,
+                         contacts_per_day=CN_CONTACTS_PER_DAY[-1],
+                         seed=CN_SCHEDULE_SEED).step_window_sets(
+        1.0, CN_HORIZON_S, n_satellites=CN_N_SATS,
+        n_stations=CN_N_STATIONS,
+        contacts_per_day=list(CN_CONTACTS_PER_DAY))
+    inj, kw = None, {}
+    if fault_seed is not None:
+        inj = FaultInjector(FaultPlan(
+            seed=fault_seed, frame_loss_rate=CN_FRAME_LOSS,
+            frame_corrupt_rate=CN_FRAME_CORRUPT,
+            spill_corrupt_every=CN_SPILL_CORRUPT_EVERY))
+        kw.update(faults=inj, frame_bytes=CN_FRAME_BYTES,
+                  link_max_retries=CN_MAX_RETRIES)
+    cs = ConstellationScheduler(engines, window_sets=ws,
+                                n_stations=CN_N_STATIONS, s_per_step=1.0,
+                                horizon_s=CN_HORIZON_S, policy=policy,
+                                handover=handover,
+                                handover_margin_ticks=CN_MARGIN_TICKS, **kw)
+    assignments = [[r.clone() for r in trace]]
+    assignments += [[] for _ in range(CN_N_SATS - 1)]
+    t0 = time.perf_counter()
+    rep = cs.run(assignments)
+    wall = time.perf_counter() - t0
+    toks = [rep.tokens[rid] for rid in sorted(rep.tokens)]
+    out = {
+        "wall_s": round(wall, 4),
+        "policy": policy, "handover": handover,
+        "final_clock": rep.final_clock,
+        "delivered_tokens": rep.delivered_tokens,
+        "goodput_tokens_per_tick": round(rep.goodput, 4),
+        "n_undelivered": len(rep.undelivered),
+        "n_handovers": rep.n_handovers,
+        "n_result_forwards": rep.n_result_forwards,
+        "n_handover_redos": rep.n_handover_redos,
+        "assigned_pass_ticks": rep.assigned_pass_ticks,
+        "pool_drained": all(e.slots.allocator.in_use == 0
+                            and e.slots.allocator.reserved == 0
+                            for e in engines),
+        "spill_store_empty": all(len(s.store) == 0 for s in cs.sats),
+        "lanes_empty": all(len(l) == 0 for l in [*cs.lanes, *cs.isl]),
+        "within_energy_budget": rep.within_energy_budget,
+        "energy_j": [round(cs.fleet.energy_j(k), 2)
+                     for k in range(CN_N_SATS)],
+        "fleet_totals": {k: round(v, 4)
+                         for k, v in rep.fleet_totals.items()},
+    }
+    if inj is not None:
+        out["injected"] = {
+            "n_frames_lost": inj.n_frames_lost,
+            "n_frame_corruptions": inj.n_frame_corruptions,
+            "n_spill_corruptions": inj.n_spill_corruptions,
+            "n_corruptions_injected": inj.n_corruptions_injected,
+        }
+        out["n_corruptions_detected"] = (
+            sum(l["n_corruptions_detected"]
+                for l in [*rep.lane_stats, *rep.isl_stats])
+            + sum(s.store.stats().get("n_spill_corruptions_detected", 0)
+                  for s in cs.sats if s.store is not None))
+        out["n_silent_corruptions"] = sum(
+            l["n_silent_corruptions"]
+            for l in [*rep.lane_stats, *rep.isl_stats])
+    return out, toks
+
+
+def _constellation_report(cfg, params):
+    """The GATE_VERSION 7 section: contact planning + token-exact
+    handover vs K independent onboard/ground pairs on the same window
+    sets.  Goodput is measured in delivered tokens per drain tick, so
+    both replays are compared on schedule time, not wall time."""
+    exact = lambda a, b: (len(a) == len(b)
+                          and all(np.array_equal(x, y)
+                                  for x, y in zip(a, b)))
+    trace = _constellation_trace(cfg)
+    want = _constellation_reference(cfg, params, trace)
+    pooled, pooled_toks = _serve_constellation(
+        cfg, params, trace, policy="value", handover=True)
+    indep, indep_toks = _serve_constellation(
+        cfg, params, trace, policy="static", handover=False)
+    dl_pooled = pooled["fleet_totals"].get("bytes_downlinked", 0.0)
+    dl_indep = indep["fleet_totals"].get("bytes_downlinked", 0.0)
+    return {
+        "trace": {"n_satellites": CN_N_SATS,
+                  "n_stations": CN_N_STATIONS,
+                  "n_requests": CN_N_REQUESTS,
+                  "prompt_lens": list(CN_PROMPTS),
+                  "max_new": list(CN_MAX_NEW),
+                  "horizon_s": CN_HORIZON_S,
+                  "contacts_per_day": list(CN_CONTACTS_PER_DAY),
+                  "contact_duration_s": CN_CONTACT_DURATION_S,
+                  "handover_margin_ticks": CN_MARGIN_TICKS,
+                  "schedule_seed": CN_SCHEDULE_SEED},
+        "pooled": pooled,
+        "independent_pairs": indep,
+        "token_exact_vs_solo": exact(pooled_toks, want),
+        "independent_token_exact_vs_solo": exact(indep_toks, want),
+        "goodput_ratio": round(
+            pooled["goodput_tokens_per_tick"]
+            / max(indep["goodput_tokens_per_tick"], 1e-9), 3),
+        "downlink_bytes_ratio": round(dl_pooled / max(dl_indep, 1e-9), 4),
+    }
+
+
+def run_constellation_chaos(seeds):
+    """The CI chaos sweep's constellation lane: handover under a lossy,
+    corrupting fault plan (ARQ re-ships frames, corrupt spill records
+    redo from prefill) must still deliver token-exact answers and drain
+    every pool, store and lane."""
+    import jax
+    from repro.models import transformer as T
+
+    cfg, _ = _make_engine_inputs()
+    params = T.init_params(jax.random.PRNGKey(0), cfg, max_seq=MAX_SEQ)
+    trace = _constellation_trace(cfg)
+    want = _constellation_reference(cfg, params, trace)
+    failures = []
+    for seed in seeds:
+        flt, toks = _serve_constellation(cfg, params, trace,
+                                         policy="value", handover=True,
+                                         fault_seed=seed)
+        inj = flt["injected"]
+        checks = {
+            "token_exact": (len(toks) == len(want) and all(
+                np.array_equal(a, b) for a, b in zip(toks, want))),
+            "handovers": flt["n_handovers"] > 0,
+            "all_delivered": flt["n_undelivered"] == 0,
+            "detected": (inj["n_corruptions_injected"] == 0
+                         or flt["n_corruptions_detected"] > 0),
+            "no_silent": flt["n_silent_corruptions"] == 0,
+            "drained": (flt["pool_drained"] and flt["spill_store_empty"]
+                        and flt["lanes_empty"]),
+        }
+        bad = [k for k, ok in checks.items() if not ok]
+        status = "ok" if not bad else f"FAIL({','.join(bad)})"
+        print(f"constellation chaos seed={seed}: {status} "
+              f"handovers={flt['n_handovers']} "
+              f"redo={flt['n_handover_redos']} "
+              f"injected={inj['n_corruptions_injected']} "
+              f"detected={flt['n_corruptions_detected']} "
+              f"clock={flt['final_clock']}")
+        if bad:
+            failures.append((seed, bad))
+    return failures
+
+
 def run_chaos(seeds):
     """The CI chaos sweep: replay the fault section under several
     FaultPlan seeds, holding the full invariant set for each."""
@@ -992,6 +1227,7 @@ def run():
     out["shared_prefix"] = _shared_prefix_report(cfg, params)
     out["fault_replay"] = _fault_replay_report(cfg, params)
     out["speculative"] = _speculative_report(cfg, params)
+    out["constellation"] = _constellation_report(cfg, params)
     out["bench_version"] = BENCH_VERSION
     rows.append(("serving_contact_window_preemptive",
                  cw["preemptive"]["wall_s"] * 1e6
@@ -1051,6 +1287,17 @@ def run():
                   sd["cascade"]["raw"]["bytes_per_escalation"],
                   "bytes_per_escalation_spec":
                   sd["cascade"]["speculative"]["bytes_per_escalation"]}))
+    cn = out["constellation"]
+    rows.append(("serving_constellation",
+                 cn["pooled"]["wall_s"] * 1e6
+                 / max(cn["pooled"]["delivered_tokens"], 1),
+                 {"goodput_ratio": cn["goodput_ratio"],
+                  "n_handovers": cn["pooled"]["n_handovers"],
+                  "token_exact": cn["token_exact_vs_solo"],
+                  "independent_goodput":
+                  cn["independent_pairs"]["goodput_tokens_per_tick"],
+                  "within_energy_budget":
+                  cn["pooled"]["within_energy_budget"]}))
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     with open(os.path.join(root, "BENCH_serving.json"), "w") as f:
         json.dump(out, f, indent=2, sort_keys=True)
@@ -1061,6 +1308,14 @@ def run():
 if __name__ == "__main__":
     import sys
 
+    if len(sys.argv) > 1 and sys.argv[1] == "--chaos-constellation":
+        seeds = [int(s) for s in sys.argv[2:]] or [CN_FAULT_SEED]
+        failures = run_constellation_chaos(seeds)
+        if failures:
+            print(f"constellation chaos sweep FAILED: {failures}")
+            sys.exit(1)
+        print(f"constellation chaos sweep ok across seeds {seeds}")
+        sys.exit(0)
     if len(sys.argv) > 1 and sys.argv[1] == "--chaos":
         seeds = [int(s) for s in sys.argv[2:]] or [0, 1, 2, 3, 4]
         failures = run_chaos(seeds)

@@ -47,7 +47,15 @@ Gates:
     through real verify passes; the cascade replay token-exact with
     raw escalation while shipping STRICTLY fewer bytes per escalation
     and answering on the ground tier in strictly fewer ticks, with the
-    draft/raw byte split metered in the ledger and pools drained.
+    draft/raw byte split metered in the ledger and pools drained;
+  * constellation — K-satellite contact planning with token-exact
+    inter-satellite handover vs the K-independent-pairs comparator on
+    the same window sets: pooled goodput >= independent goodput at
+    equal energy/byte budget (both within the per-satellite bus cap,
+    downlink payload bytes no greater than the comparator's), handovers
+    really happened, both replays token-exact with a solo run of the
+    same requests, all answers delivered, every pool, spill store and
+    lane drained.
 
 Each gate prints PASS/FAIL; the exit code is non-zero if any failed.
 """
@@ -56,7 +64,7 @@ from __future__ import annotations
 import json
 import sys
 
-GATE_VERSION = 6
+GATE_VERSION = 7
 
 
 class Gates:
@@ -341,6 +349,50 @@ def check_speculative(g: Gates, sd: dict) -> None:
             raw["pool_drained"] is True and spc["pool_drained"] is True)
 
 
+def check_constellation(g: Gates, cn: dict) -> None:
+    pooled, indep = cn["pooled"], cn["independent_pairs"]
+    # the tentpole: pooling K satellites' pass seconds through the
+    # value planner + ISL handover beats K uncoordinated pairs on the
+    # SAME window sets — and never by cheating on correctness
+    g.check("pooled replay token-exact vs solo",
+            cn["token_exact_vs_solo"] is True)
+    g.check("independent-pairs replay token-exact vs solo",
+            cn["independent_token_exact_vs_solo"] is True)
+    g.check("pooled goodput >= independent-pairs goodput",
+            cn["goodput_ratio"] >= 1.0, f"ratio={cn['goodput_ratio']}")
+    # the comparison is at equal energy/byte budget: both fleets stay
+    # within the per-satellite bus cap, and the pooled replay downlinks
+    # no more answer payload bytes than the comparator (the ISL bytes
+    # it spends are metered separately and capped by the same budget)
+    g.check("both replays within the per-satellite energy budget",
+            pooled["within_energy_budget"] is True
+            and indep["within_energy_budget"] is True)
+    g.check("pooled downlink payload bytes <= independent pairs'",
+            cn["downlink_bytes_ratio"] <= 1.0 + 1e-6,
+            f"ratio={cn['downlink_bytes_ratio']}")
+    # handovers really happened (not a vacuous win) and paid off over
+    # a metered inter-satellite link
+    g.check("handovers observed", pooled["n_handovers"] > 0,
+            f"n={pooled['n_handovers']}")
+    g.check("ISL bytes metered",
+            pooled["fleet_totals"].get("bytes_isl", 0) > 0,
+            f"bytes={pooled['fleet_totals'].get('bytes_isl', 0)}")
+    g.check("independent comparator never hands over",
+            indep["n_handovers"] == 0 and indep["handover"] is False)
+    g.check("every answer delivered in both replays",
+            pooled["n_undelivered"] == 0 and indep["n_undelivered"] == 0,
+            f"pooled={pooled['n_undelivered']} "
+            f"indep={indep['n_undelivered']}")
+    g.check("equal tokens delivered across replays",
+            pooled["delivered_tokens"] == indep["delivered_tokens"] > 0,
+            f"{pooled['delivered_tokens']} vs {indep['delivered_tokens']}")
+    for name, run in (("pooled", pooled), ("independent", indep)):
+        g.check(f"{name} pools, spill stores and lanes drained",
+                run["pool_drained"] is True
+                and run["spill_store_empty"] is True
+                and run["lanes_empty"] is True)
+
+
 def main(argv) -> int:
     path = argv[1] if len(argv) > 1 else "BENCH_serving.json"
     with open(path) as f:
@@ -348,11 +400,14 @@ def main(argv) -> int:
     g = Gates()
     check_version(g, bench)
     if g.failures:
-        # a stale benchmark may predate gated keys entirely: stop at the
-        # version gate instead of dying in a KeyError mid-report
-        print(f"\nFAILED: stale {path} — re-run "
-              "`PYTHONPATH=src python -m benchmarks.serving_throughput` "
-              "before gating")
+        # a stale benchmark may predate gated keys entirely: stop at
+        # the version gate with a clear remedy instead of dying in a
+        # KeyError mid-report
+        got = bench.get("bench_version")
+        print(f"\nFAILED: bench_version {got} < GATE_VERSION "
+              f"{GATE_VERSION} — rerun the benchmark "
+              f"(`PYTHONPATH=src python -m benchmarks.serving_throughput`) "
+              f"to refresh {path}")
         return 1
     check_throughput(g, bench)
     check_contact_window(g, bench["contact_window"])
@@ -361,6 +416,7 @@ def main(argv) -> int:
     check_shared_prefix(g, bench["shared_prefix"])
     check_fault_replay(g, bench["fault_replay"])
     check_speculative(g, bench["speculative"])
+    check_constellation(g, bench["constellation"])
     print(f"\n{'OK' if not g.failures else 'FAILED'}: "
           f"{g.failures} gate(s) failed ({path}, gate v{GATE_VERSION})")
     return 1 if g.failures else 0
