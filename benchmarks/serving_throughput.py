@@ -112,6 +112,27 @@ the same requests, and every pool, spill store and lane drains.
 lossy/corrupting fault plan per seed (the CI chaos step's
 constellation lane).
 
+The SHARDED section (``sharded``) replays one trace through the paged
+continuous engine twice — single-device vs ``ContinuousEngine(mesh=
+make_serving_mesh())``, a tensor-parallel mesh over EVERY visible
+device (attention heads + per-device KV page pools sharded on the
+``model`` axis, all-gather only at the logits) — plus a MoE replay
+whose expert dispatch is expert-parallel over the same axis.  Configs
+are fp32 so cross-device reduction order cannot perturb greedy argmax.
+On the default 1-device CI lane the mesh is the trivial ``(1, 1)`` and
+the section degenerates to an A/A parity check; the ``sharded-smoke``
+CI job reruns it 4-way via ``--sharded`` (which forces
+``--xla_force_host_platform_device_count=4`` before JAX initializes)
+and asserts the 4-shard invariants inline.  CI gates (GATE_VERSION 8):
+both replays token-exact with their single-device comparators,
+``kv_bytes_per_device * n_kv_shards == kv_cache_bytes`` (page pools
+shard only head/latent axes, never page axes, so the per-device ledger
+IS the global ledger: ``peak_pages_in_use_per_device ==
+peak_pages_in_use``), sharded tokens/s >= ``SHARDED_MIN_RATIO`` x the
+single-device run's at equal batch, pools drained, and the MoE run's
+``experts_per_device * n_expert_shards == n_experts`` (per-device
+dispatch really metered).
+
 The gates live in ``scripts/check_bench.py`` (run it locally after the
 benchmark: ``python scripts/check_bench.py BENCH_serving.json``).
 
@@ -136,7 +157,7 @@ CW_PERIOD = 40              # decode ticks between window opens
 CW_DURATION = 8             # ticks per window (gap > max max_new so the
                             # restart baseline cannot livelock)
 CW_MAX_STEPS = 20_000       # replay safety valve
-BENCH_VERSION = 7           # bumped when gated keys change (check_bench)
+BENCH_VERSION = 8           # bumped when gated keys change (check_bench)
 
 # overlap replay: denser passes (so long sequences straddle several and
 # re-preemption exercises the KV-delta format) + a staging reserve that
@@ -248,6 +269,20 @@ CN_FRAME_LOSS = 0.2
 CN_FRAME_CORRUPT = 0.15
 CN_SPILL_CORRUPT_EVERY = 3
 CN_FAULT_SEED = 11          # the CI chaos step's constellation seed
+
+# sharded replay: fp32 configs (cross-device psum must not reorder a
+# reduction into a different greedy argmax) with head counts that
+# divide a 4-way model axis.  The dense lane is timed A/B (warmed jit
+# caches) for the throughput gate; the MoE lane is about expert
+# dispatch accounting, not wall time, so it runs cold.
+SH_N_REQUESTS = 12
+SH_TIMED_REPS = 3           # best-of-N walls for the parity gate: the
+                            # replays are sub-second, so a single rep
+                            # is scheduler-noise-limited
+SH_MOE_N_REQUESTS = 6
+SH_SEED = 11                # dense-lane poisson trace seed
+SH_MOE_SEED = 13
+SH_FORCED_DEVICES = 4       # --sharded lane's forced host device count
 
 
 def _make_engine_inputs():
@@ -1175,6 +1210,143 @@ def run_chaos(seeds):
     return failures
 
 
+def _serve_mesh(cfg, params, trace, mesh):
+    """One paged continuous replay, optionally on a device mesh.
+    Returns (report_dict, tokens_by_rid_order) — the report carries the
+    engine's full KV accounting (per-device bytes/pages, mesh axes,
+    expert dispatch) so the gates read one flat dict per run."""
+    from repro.serving.engine import ContinuousEngine
+
+    eng = ContinuousEngine(cfg, params, n_slots=N_SLOTS, max_seq=MAX_SEQ,
+                           kv_layout="paged", page_size=PAGE_SIZE,
+                           mesh=mesh)
+    t0 = time.perf_counter()
+    results = eng.run(_clone(trace))
+    wall = time.perf_counter() - t0
+    useful = sum(len(r.tokens) for r in results.values())
+    alloc = eng.slots.allocator
+    report = {"useful_tokens": useful, "wall_s": round(wall, 4),
+              "tokens_per_s": round(useful / wall, 2),
+              "pool_drained": alloc.in_use == 0 and alloc.reserved == 0,
+              **eng.kv_cache_stats()}
+    return report, [results[k].tokens for k in sorted(results)]
+
+
+def _token_exact(a, b):
+    return bool(len(a) == len(b)
+                and all(np.array_equal(x, y) for x, y in zip(a, b)))
+
+
+def _sharded_report():
+    """Single-device vs mesh-sharded A/B on the same traces.
+
+    The mesh spans every visible device (``make_serving_mesh()``): one
+    device on the default bench lane, ``SH_FORCED_DEVICES`` under the
+    ``--sharded`` CI lane.  The dense lane is warmed then timed for the
+    throughput-parity gate; the MoE lane demonstrates expert-parallel
+    serving prefill (per-device dispatch counts in the stats)."""
+    import jax
+    from repro.config import get_reduced_config
+    from repro.launch.mesh import make_serving_mesh
+    from repro.models import transformer as T
+    from repro.serving.batching import poisson_trace
+
+    cfg = get_reduced_config("smollm-360m").with_(
+        param_dtype="float32", activation_dtype="float32",
+        n_heads=8, n_kv_heads=4, head_dim=32)
+    params = T.init_params(jax.random.PRNGKey(0), cfg, max_seq=MAX_SEQ)
+    trace = poisson_trace(SH_N_REQUESTS, rate=ARRIVAL_RATE,
+                          prompt_lens=PROMPT_LENS, max_new=MAX_NEW,
+                          vocab_size=cfg.vocab_size, seed=SH_SEED)
+    mesh = make_serving_mesh()
+
+    runs, toks = {}, {}
+    for name, m in (("single_device", None), ("sharded", mesh)):
+        _serve_mesh(cfg, params, trace, m)     # warmup: populate jit caches
+        for _ in range(SH_TIMED_REPS):
+            rep, toks[name] = _serve_mesh(cfg, params, trace, m)
+            if name not in runs or rep["wall_s"] < runs[name]["wall_s"]:
+                runs[name] = rep
+    sh, sd = runs["sharded"], runs["single_device"]
+
+    # expert-parallel MoE serving: same A/B, dispatch accounting gated
+    moe_cfg = get_reduced_config("qwen3-moe-30b-a3b").with_(
+        param_dtype="float32", activation_dtype="float32", n_kv_heads=4)
+    moe_params = T.init_params(jax.random.PRNGKey(1), moe_cfg,
+                               max_seq=MAX_SEQ)
+    moe_trace = poisson_trace(SH_MOE_N_REQUESTS, rate=ARRIVAL_RATE,
+                              prompt_lens=PROMPT_LENS, max_new=MAX_NEW,
+                              vocab_size=moe_cfg.vocab_size,
+                              seed=SH_MOE_SEED)
+    moe_runs, moe_toks = {}, {}
+    for name, m in (("single_device", None), ("sharded", mesh)):
+        moe_runs[name], moe_toks[name] = _serve_mesh(
+            moe_cfg, moe_params, moe_trace, m)
+    msh = moe_runs["sharded"]
+
+    return {
+        "n_devices": len(jax.devices()),
+        "single_device": sd,
+        "sharded": sh,
+        "token_exact": _token_exact(toks["sharded"],
+                                    toks["single_device"]),
+        "throughput_ratio": round(sh["tokens_per_s"]
+                                  / sd["tokens_per_s"], 3),
+        "kv_bytes_conserved": bool(
+            sh["kv_bytes_per_device"] * sh["n_kv_shards"]
+            == sh["kv_cache_bytes"]),
+        "peak_pages_match_ledger": bool(
+            sh["peak_pages_in_use_per_device"] == sh["peak_pages_in_use"]),
+        "moe": {
+            "single_device": moe_runs["single_device"],
+            "sharded": msh,
+            "token_exact": _token_exact(moe_toks["sharded"],
+                                        moe_toks["single_device"]),
+            "n_experts": moe_cfg.moe.n_experts,
+            "expert_dispatch_conserved": bool(
+                msh["experts_per_device"] * msh["n_expert_shards"]
+                == moe_cfg.moe.n_experts),
+        },
+        "trace": {"n_requests": SH_N_REQUESTS,
+                  "moe_n_requests": SH_MOE_N_REQUESTS,
+                  "n_slots": N_SLOTS, "max_seq": MAX_SEQ,
+                  "page_size": PAGE_SIZE,
+                  "arrival_rate": ARRIVAL_RATE,
+                  "prompt_lens": list(PROMPT_LENS),
+                  "max_new": list(MAX_NEW)},
+    }
+
+
+def run_sharded_smoke() -> bool:
+    """The ``--sharded`` CI lane: ``__main__`` forces
+    ``SH_FORCED_DEVICES`` host devices BEFORE JAX initializes, then this
+    asserts the real multi-device invariants the 1-device bench lane
+    cannot exercise (4-way KV shards, 1 expert per device)."""
+    sh = _sharded_report()
+    n = SH_FORCED_DEVICES
+    checks = {
+        "dense_token_exact": sh["token_exact"] is True,
+        "moe_token_exact": sh["moe"]["token_exact"] is True,
+        "n_devices": sh["n_devices"] == n,
+        "kv_shards": sh["sharded"]["n_kv_shards"] == n,
+        "kv_bytes_conserved": sh["kv_bytes_conserved"],
+        "peak_pages_match_ledger": sh["peak_pages_match_ledger"],
+        "expert_shards": sh["moe"]["sharded"]["n_expert_shards"] == n,
+        "expert_dispatch_conserved": sh["moe"]["expert_dispatch_conserved"],
+        "pools_drained": (sh["sharded"]["pool_drained"]
+                          and sh["moe"]["sharded"]["pool_drained"]),
+    }
+    for name, ok in checks.items():
+        print(f"{'PASS' if ok else 'FAIL'}  sharded-smoke {name}")
+    print(json.dumps({"throughput_ratio": sh["throughput_ratio"],
+                      "kv_bytes_per_device":
+                      sh["sharded"]["kv_bytes_per_device"],
+                      "experts_per_device":
+                      sh["moe"]["sharded"]["experts_per_device"]},
+                     sort_keys=True))
+    return all(checks.values())
+
+
 def run():
     import jax
     from repro.models import transformer as T
@@ -1228,6 +1400,7 @@ def run():
     out["fault_replay"] = _fault_replay_report(cfg, params)
     out["speculative"] = _speculative_report(cfg, params)
     out["constellation"] = _constellation_report(cfg, params)
+    out["sharded"] = _sharded_report()
     out["bench_version"] = BENCH_VERSION
     rows.append(("serving_contact_window_preemptive",
                  cw["preemptive"]["wall_s"] * 1e6
@@ -1298,6 +1471,17 @@ def run():
                   cn["independent_pairs"]["goodput_tokens_per_tick"],
                   "within_energy_budget":
                   cn["pooled"]["within_energy_budget"]}))
+    shd = out["sharded"]
+    rows.append(("serving_sharded",
+                 shd["sharded"]["wall_s"] * 1e6
+                 / max(shd["sharded"]["useful_tokens"], 1),
+                 {"n_devices": shd["n_devices"],
+                  "n_kv_shards": shd["sharded"]["n_kv_shards"],
+                  "throughput_ratio": shd["throughput_ratio"],
+                  "token_exact": shd["token_exact"],
+                  "moe_expert_shards":
+                  shd["moe"]["sharded"]["n_expert_shards"],
+                  "moe_token_exact": shd["moe"]["token_exact"]}))
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     with open(os.path.join(root, "BENCH_serving.json"), "w") as f:
         json.dump(out, f, indent=2, sort_keys=True)
@@ -1308,6 +1492,18 @@ def run():
 if __name__ == "__main__":
     import sys
 
+    if len(sys.argv) > 1 and sys.argv[1] == "--sharded":
+        # must land in XLA_FLAGS before anything imports jax (the
+        # module itself only imports numpy at top level, so this is
+        # still early enough here)
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "--xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                f"{flags} --xla_force_host_platform_device_count="
+                f"{SH_FORCED_DEVICES}").strip()
+        ok = run_sharded_smoke()
+        print(f"sharded smoke {'ok' if ok else 'FAILED'}")
+        sys.exit(0 if ok else 1)
     if len(sys.argv) > 1 and sys.argv[1] == "--chaos-constellation":
         seeds = [int(s) for s in sys.argv[2:]] or [CN_FAULT_SEED]
         failures = run_constellation_chaos(seeds)

@@ -55,7 +55,18 @@ Gates:
     downlink payload bytes no greater than the comparator's), handovers
     really happened, both replays token-exact with a solo run of the
     same requests, all answers delivered, every pool, spill store and
-    lane drained.
+    lane drained;
+  * sharded — the mesh-sharded engine (tensor-parallel attention +
+    per-device KV page pools, expert-parallel MoE dispatch) vs the
+    single-device engine on the SAME traces: both the dense and MoE
+    replays token-exact, sharded tokens/s >= SHARDED_MIN_RATIO x the
+    single-device run's at equal batch, per-device KV bytes times the
+    shard count reconstructing the global pool exactly, the per-device
+    page ledger identical to the global one (page axes are never cut),
+    per-device expert dispatch conserving the expert count, and both
+    pools drained.  On the default 1-device lane the mesh is trivial
+    (an A/A parity check); the ``sharded-smoke`` CI job reruns the
+    section 4-way via ``--sharded`` with its own inline assertions.
 
 Each gate prints PASS/FAIL; the exit code is non-zero if any failed.
 """
@@ -64,7 +75,15 @@ from __future__ import annotations
 import json
 import sys
 
-GATE_VERSION = 7
+GATE_VERSION = 8
+
+# sharded-vs-single throughput floor: parity with noise margin (the
+# bench times best-of-N sub-second replays).  On a real multi-device
+# mesh the sharded run should win outright; on the 1-device bench
+# lane the mesh is trivial and the honest expectation is parity, so
+# the gate guards against the mesh machinery REGRESSING throughput
+# rather than demanding a speedup the hardware can't show.
+SHARDED_MIN_RATIO = 0.9
 
 
 class Gates:
@@ -393,6 +412,56 @@ def check_constellation(g: Gates, cn: dict) -> None:
                 and run["lanes_empty"] is True)
 
 
+def check_sharded(g: Gates, sh: dict) -> None:
+    sd, shd = sh["single_device"], sh["sharded"]
+    moe = sh["moe"]
+    # the tentpole: sharding the engine across the mesh must never
+    # change an answer...
+    g.check("sharded dense replay token-exact vs single-device",
+            sh["token_exact"] is True)
+    g.check("sharded MoE replay token-exact vs single-device",
+            moe["token_exact"] is True)
+    # ...and must not cost throughput at equal batch (parity floor —
+    # every bench lane timeshares one core across the forced devices)
+    g.check("sharded tokens/s >= parity floor vs single-device",
+            sh["throughput_ratio"] >= SHARDED_MIN_RATIO,
+            f"ratio={sh['throughput_ratio']} floor={SHARDED_MIN_RATIO}")
+    g.check("sharded run uses the paged layout",
+            shd["kv_layout"] == "paged")
+    # per-device accounting: the KV pool shards only head/latent axes,
+    # so per-device bytes times the shard count rebuilds the global
+    # pool exactly and the page ledger is identical on every device
+    g.check("per-device KV bytes x shards == global KV bytes",
+            sh["kv_bytes_conserved"] is True,
+            f"{shd['kv_bytes_per_device']} x {shd['n_kv_shards']} "
+            f"vs {shd['kv_cache_bytes']}")
+    g.check("per-device peak pages == global peak pages",
+            sh["peak_pages_match_ledger"] is True,
+            f"{shd['peak_pages_in_use_per_device']} "
+            f"vs {shd['peak_pages_in_use']}")
+    g.check("mesh spans every visible device",
+            shd["mesh_devices"] == sh["n_devices"] >= 1,
+            f"mesh={shd['mesh_devices']} visible={sh['n_devices']}")
+    g.check("single-device comparator is unsharded",
+            sd["n_kv_shards"] == 1, f"n={sd['n_kv_shards']}")
+    # expert-parallel dispatch really metered per device
+    g.check("MoE expert dispatch conserved across devices",
+            moe["expert_dispatch_conserved"] is True,
+            f"{moe['sharded']['experts_per_device']} x "
+            f"{moe['sharded']['n_expert_shards']} "
+            f"vs {moe['n_experts']}")
+    g.check("MoE expert shards cover the mesh",
+            moe["sharded"]["n_expert_shards"] == shd["mesh_devices"],
+            f"{moe['sharded']['n_expert_shards']} "
+            f"vs {shd['mesh_devices']}")
+    g.check("sharded pools drained",
+            shd["pool_drained"] is True
+            and moe["sharded"]["pool_drained"] is True)
+    g.check("single-device pools drained",
+            sd["pool_drained"] is True
+            and moe["single_device"]["pool_drained"] is True)
+
+
 def main(argv) -> int:
     path = argv[1] if len(argv) > 1 else "BENCH_serving.json"
     with open(path) as f:
@@ -417,6 +486,7 @@ def main(argv) -> int:
     check_fault_replay(g, bench["fault_replay"])
     check_speculative(g, bench["speculative"])
     check_constellation(g, bench["constellation"])
+    check_sharded(g, bench["sharded"])
     print(f"\n{'OK' if not g.failures else 'FAILED'}: "
           f"{g.failures} gate(s) failed ({path}, gate v{GATE_VERSION})")
     return 1 if g.failures else 0

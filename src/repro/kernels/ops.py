@@ -21,6 +21,20 @@ def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def paged_kernel_ok() -> bool:
+    """Whether the Pallas paged-decode kernel may serve this trace: TPU
+    only, and only OUTSIDE mesh rules.  Under a serving mesh the KV pool
+    is head-sharded and attention must flow through the jnp gather path,
+    which GSPMD partitions per shard — the kernel's block-table DMA
+    index_map addresses one un-sharded pool and would read a quarter
+    pool as if it were whole."""
+    if not on_tpu():
+        return False
+    from repro.models.pspec import current_mesh    # local: no jax device
+    # state is touched importing this module (same rule as on_tpu)
+    return current_mesh() is None
+
+
 def flash_attention(q, k, v, *, causal=True, window=0, **kw):
     return flash_attention_kernel(q, k, v, causal=causal, window=window,
                                   interpret=not on_tpu(), **kw)

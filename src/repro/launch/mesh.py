@@ -20,6 +20,19 @@ def make_local_mesh():
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
+def make_serving_mesh(n_devices=None):
+    """Serving mesh: every local device on the tensor-parallel "model"
+    axis (a trivial "data" axis keeps the logical-axis maps and preset
+    rules shared with training).  ``ContinuousEngine(mesh=...)`` shards
+    attention heads, the paged KV pool and MoE experts over it; on CPU
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` forces a
+    4-device host platform, which is how the sharded serving tests and
+    bench lane run without accelerators."""
+    if n_devices is None:
+        n_devices = len(jax.devices())
+    return jax.make_mesh((1, n_devices), ("data", "model"))
+
+
 # TPU v5e hardware constants for the roofline analysis (per chip)
 PEAK_FLOPS_BF16 = 197e12          # FLOP/s
 HBM_BW = 819e9                    # B/s

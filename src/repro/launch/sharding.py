@@ -69,6 +69,20 @@ SHARDING_PRESETS = {
     },
 }
 
+# The continuous engine's mesh (launch.mesh.make_serving_mesh): params
+# tensor-parallel over "model", replicated elsewhere (no FSDP — serving
+# never pays per-step weight all-gathers), experts expert-parallel over
+# "model".  "batch" and "seq" stay REPLICATED: slots are few, decode
+# scatters index the paged pool per batch row, and the page axis carries
+# block-table semantics no mesh axis may cut.
+SERVING_LOGICAL_MAP = {
+    "batch": (),
+    "fsdp": (),
+    "model": ("model",),
+    "expert": ("model",),
+    "seq": (),
+}
+
 # weights whose LAST dim is the contraction output fed back to d_model
 _DOWN_STYLE = ("w_o", "w_down", "out_proj")
 _REPLICATED = ("A_log", "D", "dt_bias", "b_if", "b_gates", "conv_w", "conv_b",
@@ -159,6 +173,35 @@ def cache_pspecs(mesh: Mesh, cfg: ModelConfig, cache_shape, logical_map=None):
     with mesh_rules(mesh, logical_map):
         def one(path, leaf):
             spec = pspec_for(leaf.shape, cache_logical_axes(cfg, path, leaf))
+            return NamedSharding(mesh, spec if spec is not None else P())
+        return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+def paged_cache_logical_axes(cfg: ModelConfig, path, leaf) -> list:
+    """Logical axes for one PAGED KV pool leaf (``init_paged_cache``):
+    k/v pools (L, n_pages, page_size, Hkv, hd) shard their KV heads over
+    "model"; MLA latent pools (L, n_pages, page_size, rank) shard the
+    latent rank.  The layer/page/offset axes are never cut — a page is
+    whole on every device along them, so extract/graft snapshots (and
+    hence spills, checkpoints and constellation handovers) reassemble
+    token-exactly from a plain ``device_get``.  Indivisible head counts
+    fall back to replication through ``pspec_for``."""
+    last = _path_names(path)[-1]
+    nd = leaf.ndim
+    if last in ("k", "v"):
+        return [None, None, None, "model", None]
+    if last in ("ckv", "krope"):
+        return [None, None, None, "model"]
+    return [None] * nd
+
+
+def paged_cache_pspecs(mesh: Mesh, cfg: ModelConfig, cache_shape,
+                       logical_map=None):
+    """NamedSharding tree for an ``init_paged_cache`` pool."""
+    with mesh_rules(mesh, logical_map):
+        def one(path, leaf):
+            spec = pspec_for(leaf.shape,
+                             paged_cache_logical_axes(cfg, path, leaf))
             return NamedSharding(mesh, spec if spec is not None else P())
         return jax.tree_util.tree_map_with_path(one, cache_shape)
 

@@ -342,6 +342,8 @@ def paged_prefill_attention(p: dict, cfg: ModelConfig, x, pool_k, pool_v,
     pool_v = pool_v.at[page, off].set(v[0].astype(pool_v.dtype))
     kg = pool_k[block_tables.reshape(-1)].reshape(1, -1, *pool_k.shape[2:])
     vg = pool_v[block_tables.reshape(-1)].reshape(1, -1, *pool_v.shape[2:])
+    kg = shard(kg, "batch", None, "model", None)
+    vg = shard(vg, "batch", None, "model", None)
     o = chunked_attention(q, kg, vg, causal=True, q_offset=pos_offset,
                           window=window, kv_len=pos_offset + n_valid)
     out = o.reshape(B, C, -1) @ p["w_o"]
@@ -386,7 +388,7 @@ def paged_attention_decode(p: dict, cfg: ModelConfig, x, pool_k, pool_v,
     pool_v = pool_v.at[page, off].set(v[:, 0].astype(pool_v.dtype))
     from repro.kernels import ops              # local: models stay
     # importable without touching the Pallas toolchain at module load
-    if window == 0 and ops.on_tpu():
+    if window == 0 and ops.paged_kernel_ok():
         # the Pallas kernel streams pages by block-table lookup in the
         # DMA index_map — no contiguous gather is ever materialized
         o = ops.paged_decode_attention(q[:, 0], pool_k, pool_v,
@@ -396,8 +398,10 @@ def paged_attention_decode(p: dict, cfg: ModelConfig, x, pool_k, pool_v,
         # position order and reuse the masked reference attention
         kg = pool_k[block_tables]            # (B, max_pages, ps, Hkv, D)
         vg = pool_v[block_tables]
-        kg = kg.reshape(B, -1, *pool_k.shape[2:])
-        vg = vg.reshape(B, -1, *pool_v.shape[2:])
+        kg = shard(kg.reshape(B, -1, *pool_k.shape[2:]),
+                   "batch", None, "model", None)
+        vg = shard(vg.reshape(B, -1, *pool_v.shape[2:]),
+                   "batch", None, "model", None)
         kv_start = jnp.maximum(pos + 1 - window, 0) if window else None
         o = chunked_attention(q, kg, vg, causal=False, kv_len=pos + 1,
                               kv_start=kv_start)
@@ -530,8 +534,10 @@ def mla_paged_prefill(p: dict, cfg: ModelConfig, x, pool_ckv, pool_krope,
     pool_krope = pool_krope.at[page, off].set(
         k_rope[0].astype(pool_krope.dtype))
     bt = block_tables.reshape(-1)
-    ckv_seq = pool_ckv[bt].reshape(1, -1, pool_ckv.shape[-1])
-    krope_seq = pool_krope[bt].reshape(1, -1, pool_krope.shape[-1])
+    ckv_seq = shard(pool_ckv[bt].reshape(1, -1, pool_ckv.shape[-1]),
+                    "batch", None, "model")
+    krope_seq = shard(pool_krope[bt].reshape(1, -1, pool_krope.shape[-1]),
+                      "batch", None, "model")
     kv_pos = jnp.arange(ckv_seq.shape[1])
     valid = ((kv_pos[None, None, :] <= pos[None, :, None])
              & (kv_pos[None, None, :] < pos_offset + n_valid))

@@ -105,6 +105,21 @@ def shard(x: jax.Array, *logical: Optional[str]) -> jax.Array:
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
 
 
+def shard_count(logical: Optional[str], dim_size: int) -> int:
+    """How many ways a dim of ``dim_size`` shards under ``logical`` with
+    the installed rules (1 without rules, or when divisibility forces
+    the replication fallback).  The serving engine reports per-device
+    KV-pool and expert-dispatch accounting with this."""
+    mesh = _STATE["mesh"]
+    if mesh is None:
+        return 1
+    axes = _resolve(logical, dim_size, mesh)
+    if axes is None:
+        return 1
+    flat = axes if isinstance(axes, tuple) else (axes,)
+    return math.prod(mesh.shape[a] for a in flat)
+
+
 def named_sharding(shape, logical) -> Optional[NamedSharding]:
     mesh = _STATE["mesh"]
     if mesh is None:

@@ -53,16 +53,23 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import ModelConfig
+from repro.launch.sharding import (SERVING_LOGICAL_MAP, paged_cache_pspecs,
+                                   params_pspecs)
 from repro.models import moe as M
 from repro.models import transformer as T
+from repro.models.pspec import mesh_rules, shard_count
 from repro.serving.batching import Request, RequestQueue
 from repro.serving.paging import (BlockAllocator, PagePrefixIndex,
-                                  default_pool_pages, pages_for)
+                                  default_pool_pages, pages_for,
+                                  per_device_pool_stats)
 
 # Jitted engine callables shared across engine instances serving the
 # same (hashable, frozen) ModelConfig: benchmark A/B replays and test
 # sweeps construct many short-lived engines, and per-instance lambdas
-# would recompile identical programs every time.
+# would recompile identical programs every time.  Keys carry the mesh
+# FINGERPRINT alongside the config: a sharded engine's traces bake
+# ``with_sharding_constraint`` ops into the jaxpr, so a sharded and an
+# unsharded engine serving the same config must never share a callable.
 _JIT_CACHE: Dict[tuple, object] = {}
 
 
@@ -71,6 +78,31 @@ def _cached_jit(key: tuple, make):
     if fn is None:
         fn = _JIT_CACHE[key] = make()
     return fn
+
+
+def _mesh_fingerprint(mesh) -> Optional[tuple]:
+    """Hashable identity of a mesh for jit-cache keys: axis names, axis
+    sizes AND the concrete device ids — two meshes over different device
+    subsets must not share compiled programs."""
+    if mesh is None:
+        return None
+    return (tuple(mesh.axis_names),
+            tuple(int(mesh.shape[a]) for a in mesh.axis_names),
+            tuple(int(d.id) for d in mesh.devices.flat))
+
+
+def _mesh_wrap(mesh, logical_map, fn):
+    """Run ``fn`` with the engine's mesh rules installed, so the
+    ``models.pspec.shard`` annotations inside the traced computation
+    resolve against the serving mesh (trace-time; later calls hit the
+    jit cache and the context is a cheap dict swap)."""
+    if mesh is None:
+        return fn
+
+    def wrapped(*args, **kw):
+        with mesh_rules(mesh, logical_map):
+            return fn(*args, **kw)
+    return wrapped
 
 
 def _dynamic_capacity_prefill(prefill_fn, cfg: ModelConfig, n_tok: int):
@@ -268,8 +300,26 @@ class _SlotOccupancy:
 
     def kv_cache_stats(self) -> dict:
         leaves = jax.tree.leaves(self.cache)
-        return {"kv_cache_bytes": int(sum(
-            l.size * jnp.dtype(l.dtype).itemsize for l in leaves))}
+        per_dev = 0
+        n_shards = 1
+        for l in leaves:
+            itemsize = jnp.dtype(l.dtype).itemsize
+            if hasattr(l, "sharding"):        # one device's slice of the leaf
+                local = int(np.prod(l.sharding.shard_shape(l.shape)))
+            else:
+                local = l.size
+            per_dev += local * itemsize
+            n_shards = max(n_shards, l.size // max(local, 1))
+        return {
+            "kv_cache_bytes": int(sum(
+                l.size * jnp.dtype(l.dtype).itemsize for l in leaves)),
+            # per-device slice of the cache under the serving mesh (the
+            # whole cache on a single device); n_kv_shards is the widest
+            # shard factor across leaves — indivisible leaves replicate,
+            # so per-device bytes may exceed global/n_kv_shards
+            "kv_bytes_per_device": int(per_dev),
+            "n_kv_shards": int(n_shards),
+        }
 
 
 class SlotManager(_SlotOccupancy):
@@ -380,11 +430,12 @@ class PagedSlotManager(_SlotOccupancy):
 
     def __init__(self, cfg: ModelConfig, n_slots: int, max_seq: int, *,
                  page_size: int = 16, pool_pages: Optional[int] = None,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False, mesh=None, logical_map=None):
         self.cfg = cfg
         self.n_slots = n_slots
         self.max_seq = max_seq
         self.page_size = page_size
+        self.mesh = mesh
         if pool_pages is None:
             pool_pages = default_pool_pages(n_slots, max_seq, page_size)
         self.allocator = BlockAllocator(pool_pages)
@@ -396,9 +447,22 @@ class PagedSlotManager(_SlotOccupancy):
         self.max_bt = pages_for(max_seq, page_size)
         self.cache = T.init_paged_cache(cfg, pool_pages + 1, page_size)
         self.states: List[Optional[_PagedSlotState]] = [None] * n_slots
-        self._graft = jax.jit(T.graft_paged_cache)
+        if mesh is None:
+            self._graft = jax.jit(T.graft_paged_cache)
+            self._copy = jax.jit(T.copy_paged_pages)
+        else:
+            # place the pool: KV heads (MLA latent rank) over "model",
+            # the layer/page/offset axes whole on every device — so the
+            # extract gather below still device_gets a token-exact global
+            # snapshot and graft scatters host pages back under GSPMD
+            pool_sh = paged_cache_pspecs(mesh, cfg, self.cache, logical_map)
+            self.cache = jax.device_put(self.cache, pool_sh)
+            # pin the output sharding of every pool-rewriting callable:
+            # scatter sharding inference CAN keep the operand layout, but
+            # pinning it makes resharding impossible rather than unlikely
+            self._graft = jax.jit(T.graft_paged_cache, out_shardings=pool_sh)
+            self._copy = jax.jit(T.copy_paged_pages, out_shardings=pool_sh)
         self._extract = jax.jit(T.extract_paged_cache)
-        self._copy = jax.jit(T.copy_paged_pages)
 
     def _lifetime_pages(self, req: Request) -> int:
         return req.pages_needed(self.page_size)
@@ -654,6 +718,7 @@ class PagedSlotManager(_SlotOccupancy):
 
     def kv_cache_stats(self) -> dict:
         a = self.allocator
+        base = super().kv_cache_stats()
         return {
             "kv_layout": "paged",
             "page_size": self.page_size,
@@ -665,7 +730,12 @@ class PagedSlotManager(_SlotOccupancy):
             "prefill_positions_skipped": self.prefill_positions_skipped,
             **(self.prefix_index.stats()
                if self.prefix_index is not None else {}),
-            **super().kv_cache_stats(),
+            **base,
+            # per-device ledger view: the page axes are never sharded, so
+            # every device's allocator state IS the global ledger
+            **per_device_pool_stats(
+                a, n_shards=base["n_kv_shards"],
+                kv_bytes_per_device=base["kv_bytes_per_device"]),
         }
 
 
@@ -745,7 +815,8 @@ class ContinuousEngine:
                  kv_layout: str = "auto", page_size: int = 16,
                  pool_pages: Optional[int] = None,
                  prefill_budget_tokens: Optional[int] = 64,
-                 prefix_cache: bool = False, draft_k: int = 8):
+                 prefix_cache: bool = False, draft_k: int = 8,
+                 mesh=None, logical_map=None):
         if cfg.family not in self.FAMILIES:
             raise NotImplementedError(
                 f"ContinuousEngine does not serve family {cfg.family!r}")
@@ -763,27 +834,45 @@ class ContinuousEngine:
         if prefix_cache and kv_layout != "paged":
             raise ValueError("prefix_cache needs the paged KV layout "
                              "(sharing is page-granular)")
+        if mesh is not None and kv_layout != "paged":
+            raise ValueError("mesh serving shards the paged KV pool — "
+                             "contiguous/recurrent layouts are unsharded")
         self.cfg = cfg
+        self.mesh = mesh
+        self.logical_map = (dict(logical_map or SERVING_LOGICAL_MAP)
+                            if mesh is not None else None)
+        mkey = _mesh_fingerprint(mesh)
+        if mesh is not None:
+            # tensor-parallel placement: attention/FFN weights split over
+            # "model", experts expert-parallel, everything else replicated
+            params = jax.device_put(
+                params, params_pspecs(mesh, params, self.logical_map))
         self.params = params
         self.max_seq = max_seq
         self.kv_layout = kv_layout
         self.prefill_budget_tokens = prefill_budget_tokens
+        wrap = lambda fn: _mesh_wrap(mesh, self.logical_map, fn)  # noqa: E731
         if kv_layout == "paged":
             self.slots = PagedSlotManager(cfg, n_slots, max_seq,
                                           page_size=page_size,
                                           pool_pages=pool_pages,
-                                          prefix_cache=prefix_cache)
-            self._decode = _cached_jit(("cont_decode_paged", cfg), lambda: jax.jit(
-                lambda p, c, t, pos, bt: T.decode_step(
-                    p, cfg, c, t, pos, block_tables=bt)))
-            self._chunk = _cached_jit(("prefill_chunk", cfg), lambda: jax.jit(
-                lambda p, c, t, nv, off, bt, cap: T.prefill_chunk(
-                    p, cfg, c, t, nv, off, bt, moe_capacity=cap),
-                static_argnums=(6,)))
+                                          prefix_cache=prefix_cache,
+                                          mesh=mesh,
+                                          logical_map=self.logical_map)
+            self._decode = _cached_jit(
+                ("cont_decode_paged", cfg, mkey), lambda: wrap(jax.jit(
+                    lambda p, c, t, pos, bt: T.decode_step(
+                        p, cfg, c, t, pos, block_tables=bt))))
+            self._chunk = _cached_jit(
+                ("prefill_chunk", cfg, mkey), lambda: wrap(jax.jit(
+                    lambda p, c, t, nv, off, bt, cap: T.prefill_chunk(
+                        p, cfg, c, t, nv, off, bt, moe_capacity=cap),
+                    static_argnums=(6,))))
         else:
             self.slots = SlotManager(cfg, n_slots, max_seq)
-            self._decode = _cached_jit(("cont_decode", cfg), lambda: jax.jit(
-                lambda p, c, t, pos: T.decode_step(p, cfg, c, t, pos)))
+            self._decode = _cached_jit(
+                ("cont_decode", cfg, mkey), lambda: wrap(jax.jit(
+                    lambda p, c, t, pos: T.decode_step(p, cfg, c, t, pos))))
         self.queue = RequestQueue(max_batch=n_slots,
                                   capacity=queue_capacity)
         self.draft_k = draft_k
@@ -803,11 +892,13 @@ class ContinuousEngine:
         self._spent_this_tick = 0
         self._verify_this_tick = 0
         self._tick_budget_left = self._budget()
-        self._prefill = _cached_jit(("cont_prefill", cfg), lambda: jax.jit(
-            lambda p, t, cap: T.forward(p, cfg, {"tokens": t},
-                                        moe_drop_free=True, moe_capacity=cap,
-                                        return_cache=True, remat=False),
-            static_argnums=(2,)))
+        self._prefill = _cached_jit(
+            ("cont_prefill", cfg, mkey), lambda: wrap(jax.jit(
+                lambda p, t, cap: T.forward(p, cfg, {"tokens": t},
+                                            moe_drop_free=True,
+                                            moe_capacity=cap,
+                                            return_cache=True, remat=False),
+                static_argnums=(2,))))
 
     def clone_fresh(self) -> "ContinuousEngine":
         """A new engine with the same config/params/layout knobs and
@@ -819,7 +910,8 @@ class ContinuousEngine:
                   queue_capacity=self.queue.capacity,
                   kv_layout=self.kv_layout,
                   prefill_budget_tokens=self.prefill_budget_tokens,
-                  draft_k=self.draft_k)
+                  draft_k=self.draft_k,
+                  mesh=self.mesh, logical_map=self.logical_map)
         if self.kv_layout == "paged":
             kw.update(page_size=self.slots.page_size,
                       pool_pages=self.slots.allocator.n_pages,
@@ -1184,7 +1276,28 @@ class ContinuousEngine:
             self.step()
         return self.results
 
+    def mesh_stats(self) -> dict:
+        """Mesh/sharding accounting: device count, per-axis sizes and
+        the MoE expert-parallel split (experts_per_device is the
+        per-device dispatch width of serving prefill — the whole expert
+        set without a mesh or for dense archs' 0 experts)."""
+        E = self.cfg.moe.n_experts if self.cfg.moe is not None else 0
+        if self.mesh is None:
+            return {"mesh_devices": 1, "mesh_axes": {},
+                    "n_expert_shards": 1, "experts_per_device": E}
+        with mesh_rules(self.mesh, self.logical_map):
+            n_exp = shard_count("expert", E) if E else 1
+        return {
+            "mesh_devices": int(self.mesh.size),
+            "mesh_axes": {str(a): int(self.mesh.shape[a])
+                          for a in self.mesh.axis_names},
+            "n_expert_shards": int(n_exp),
+            "experts_per_device": E // n_exp if E else 0,
+        }
+
     def kv_cache_stats(self) -> dict:
         """Cache-memory accounting: total cache bytes plus, for the
-        paged layout, the page-pool sizing knobs and peak utilization."""
-        return self.slots.kv_cache_stats()
+        paged layout, the page-pool sizing knobs, peak utilization and
+        the per-device (mesh-sharded) slice of each; mesh/expert
+        accounting rides along for the bench's sharded lane."""
+        return {**self.slots.kv_cache_stats(), **self.mesh_stats()}

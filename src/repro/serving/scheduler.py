@@ -590,6 +590,12 @@ class PreemptiveScheduler:
         meta = {
             "kv_layout": eng.kv_layout,
             "page_size": int(slots.page_size) if paged else 0,
+            # axis names + sizes only (no device ids): a reboot may come
+            # up on a different device set; snapshots are device_get
+            # global arrays, so only the SHAPE of the mesh must agree
+            "mesh": ([[str(a), int(eng.mesh.shape[a])]
+                      for a in eng.mesh.axis_names]
+                     if getattr(eng, "mesh", None) is not None else None),
             "clock": int(eng.clock),
             "prefill_tokens_total": int(eng.prefill_tokens_total),
             "finish_order": [int(x) for x in eng.finish_order],
@@ -630,6 +636,14 @@ class PreemptiveScheduler:
             raise RuntimeError(
                 f"checkpoint page_size {meta['page_size']} != engine "
                 f"{slots.page_size}")
+        here = ([[str(a), int(eng.mesh.shape[a])]
+                 for a in eng.mesh.axis_names]
+                if getattr(eng, "mesh", None) is not None else None)
+        if meta.get("mesh") != here:
+            raise RuntimeError(
+                f"checkpoint mesh {meta.get('mesh')} != engine {here} — "
+                "restore into an engine with the same mesh axis shape "
+                "(device identities may differ)")
         treedef = jax.tree.structure(slots.cache)
 
         def kv_of(rid: int, n: int):
